@@ -1,0 +1,43 @@
+"""Fig. 3: normalized Hamming distance d/k between the CLT-k leader's index set
+and the true top-k of the all-reduced EF gradient, over training."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs import registry
+from repro.core import metrics
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig
+from repro.core.state import CODECS
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import init_train_state
+from repro.training.train_step import build_train_step
+
+N = 4
+
+
+def run() -> list[Row]:
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=16), beta=1.0,
+                        min_size=512)
+    opt = make_optimizer("sgdm")
+    step = jax.jit(build_train_step(model, opt, schedule.constant(0.05), sc, n_workers=N))
+    state, _ = init_train_state(model, opt, sc, jax.random.PRNGKey(0), n_workers=N)
+    samples = {}
+    for i, b in zip(range(30), make_batches(cfg.vocab, N, 4, 64, seed=0)):
+        state, _ = step(state, b)
+        if i in (4, 14, 29):
+            path = [p for p in state.sc_state.residues if "mlp_up" in p][0]
+            enc = state.sc_state.residues[path]
+            m = CODECS["fp32"].decode(enc, (enc["q"].shape[-1],))
+            y = jnp.mean(m, axis=0)
+            k = max(m.shape[1] // 16, 8)
+            samples[i] = float(metrics.hamming_distance_topk(m[0], y, k))
+    derived = ",".join(f"iter{i}_d/k={v:.3f}" for i, v in samples.items())
+    return [("fig3/normalized_hamming", 0.0, derived + ",paper_range=0.2-0.7")]

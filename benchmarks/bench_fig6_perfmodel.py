@@ -1,0 +1,27 @@
+"""Figs. 1b / 6 / A8 / A9: analytical end-to-end performance model — speedups
+and communication fractions for none / local top-k / ScaleCom across worker
+counts, minibatch sizes, and peak-compute settings."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.analysis.perfmodel import PerfConfig, fig6_sweep, step_time
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    sweep = fig6_sweep()
+    for k, v in sweep.items():
+        derived = ",".join(f"{kk}={vv:.3f}" for kk, vv in v.items())
+        rows.append((f"fig6/{k}", 0.0, derived))
+    # Fig. 1b: server-link bottleneck of gathered (uncompressible) top-k
+    for n in (8, 32, 128):
+        cfg = PerfConfig(workers=n)
+        lt = step_time(cfg, "local_topk")
+        sc = step_time(cfg, "scalecom")
+        rows.append((
+            f"fig1b/n{n}", 0.0,
+            f"comm_frac_localtopk={lt['comm_fraction']:.3f},"
+            f"comm_frac_scalecom={sc['comm_fraction']:.3f}",
+        ))
+    return rows

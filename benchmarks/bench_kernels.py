@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness path) vs the
+pure-jnp oracle, plus the fused-vs-unfused residue update HBM-traffic model.
+
+On this CPU container the interpret-mode timing is NOT the TPU performance
+story; the derived column therefore reports the analytic HBM-traffic ratio the
+fusion buys on TPU (the quantity that matters at P = trillions of residues).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.core import chunked
+from repro.kernels import ref
+
+SIZE = 1 << 20
+CHUNK = 64
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (SIZE,))
+    m = jax.random.normal(jax.random.PRNGKey(1), (SIZE,))
+
+    sel = jax.jit(lambda x: ref.chunk_argmax_ref(x, CHUNK))
+    us = time_fn(sel, x)
+    rows.append(("kernels/chunk_select_jnp", us, f"elems_per_us={SIZE/us:.0f}"))
+
+    idx = sel(x)[0]
+    upd = jax.jit(lambda m, g, i: ref.ef_update_ref(m, g, i, 0.1, CHUNK))
+    us = time_fn(upd, m, x, idx)
+    # unfused reads/writes: ef=m+g (2R 1W) + gather (1R) + scatter (1W) +
+    # m update (2R 1W) ~= 7 passes; fused kernel: m,g in / m',vals out ~= 3
+    rows.append(("kernels/ef_update_jnp", us, "fused_hbm_ratio=7/3=2.3x"))
+
+    # Pallas interpret-mode correctness probe (tiny: interpret is python-slow)
+    from repro.kernels import ops
+    small = x[: 1 << 14]
+    i1, v1 = ops.chunk_select(small, CHUNK)
+    i2, v2 = ref.chunk_argmax_ref(small, CHUNK)
+    ok = bool(jnp.all(i1 == i2)) and bool(jnp.allclose(v1, v2))
+    rows.append(("kernels/pallas_interpret_allclose", 0.0, f"match={ok}"))
+    return rows

@@ -1,0 +1,45 @@
+"""Compression-rate sweep (the paper's 65x-400x operating range, Table 2's
+"more aggressive compression" rows): final loss vs rate at standard batch."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row
+from repro.configs import registry
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import TrainLoop, init_train_state, run_training
+
+STEPS = 60
+WORKERS = 8
+
+
+def _final_loss(chunk: int | None):
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    comp = CompressorConfig("none") if chunk is None else CompressorConfig("clt_k", chunk=chunk)
+    sc = ScaleComConfig(compressor=comp, beta=1.0, min_size=512, warmup_steps=8)
+    opt = make_optimizer("sgdm")
+    loop = TrainLoop(model=model, optimizer=opt, schedule=schedule.constant(0.05),
+                     sc_cfg=sc, n_workers=WORKERS, log_every=STEPS)
+    state, _ = init_train_state(model, opt, sc, jax.random.PRNGKey(0), n_workers=WORKERS)
+    batches = make_batches(cfg.vocab, WORKERS, 2, 64, seed=0)
+    _, hist = run_training(loop, state, batches, STEPS, log=None)
+    return hist[-1]["loss"]
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    base = _final_loss(None)
+    rows.append(("rate_sweep/dense", 0.0, f"final_loss={base:.4f}"))
+    for chunk in (32, 64, 128, 256):
+        loss = _final_loss(chunk)
+        rows.append((
+            f"rate_sweep/clt_k_{chunk}x", 0.0,
+            f"final_loss={loss:.4f},gap={loss-base:+.4f}",
+        ))
+    return rows

@@ -1,0 +1,37 @@
+"""Roofline table: reads experiments/dryrun/*.json (produced by
+repro.launch.dryrun) and emits one row per (arch x shape x mesh x mode) with
+the three terms, the dominant bottleneck and the useful-flop ratio.
+
+Run the dry-run first; this bench degrades gracefully to a note if no dry-run
+artifacts exist (e.g. in CI without the 512-device pass).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline/no_dryrun_artifacts", 0.0,
+                 f"run `python -m repro.launch.dryrun --all` first (dir={DRYRUN_DIR})")]
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        name = f"roofline/{d['arch']}__{d['shape']}__{d['mesh']}__{d['mode']}"
+        derived = (
+            f"compute_s={d['compute_s']:.3f},memory_s={d['memory_s']:.3f},"
+            f"collective_s={d['collective_s']:.3f},dominant={d['dominant']},"
+            f"useful_flops={d['useful_flop_ratio']:.3f},"
+            f"dcn_GB={d['dcn_bytes']/1e9:.2f}"
+        )
+        rows.append((name, d.get("compile_s", 0.0) * 1e6, derived))
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 1a / Table 1 scalability column: measured commutativity + payload
+accounting as the simulated worker count grows — ScaleCom's payload is flat
+while local top-k's reduced set grows O(n)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.core.compressors import CompressorConfig, compress
+
+SIZE = 1 << 20
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for n in (2, 8, 32):
+        ef = jax.random.normal(jax.random.PRNGKey(n), (n, SIZE))
+        for name in ("clt_k", "local_topk"):
+            cfg = CompressorConfig(name, chunk=64)
+            dense = jax.jit(lambda e: compress(e, jnp.int32(0), cfg)[2])(ef)
+            nnz = int(jnp.sum(dense != 0))
+            rows.append((
+                f"scaling/{name}_n{n}", 0.0,
+                f"reduced_nnz={nnz},frac={nnz/SIZE:.5f}",
+            ))
+    return rows

@@ -1,0 +1,43 @@
+"""Table 1: compressor overhead (FLOPs/element proxy: wall time per element on
+this host) and achieved compression rates for every compressor.
+
+ScaleCom's chunk-wise selection should be within a small constant of a plain
+elementwise pass (the paper prices it at ~3 FLOPs/element) while exact top-k
+sorting is asymptotically worse.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.core.compressors import CompressorConfig, compress
+
+SIZE = 1 << 22  # 4M elements
+N = 4
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+    ef = jax.random.normal(key, (N, SIZE))
+
+    # baseline elementwise pass (1 read+write / element)
+    axpy = jax.jit(lambda x: x * 1.0001 + 0.5)
+    base_us = time_fn(axpy, ef)
+    rows.append(("table1/elementwise_axpy", base_us, f"per_elem_ns={base_us*1e3/(N*SIZE):.4f}"))
+
+    for name, exact in [("clt_k", False), ("local_topk", False), ("random_k", False),
+                        ("true_topk", False), ("clt_k_exactsort", True)]:
+        cfg = CompressorConfig(name.replace("_exactsort", ""), chunk=64, exact=exact)
+        fn = jax.jit(lambda e, t: compress(e, t, cfg)[2])
+        us = time_fn(fn, ef, jnp.int32(1))
+        dense = fn(ef, jnp.int32(1))
+        rate = float(dense.size / jnp.maximum(jnp.sum(dense != 0), 1))
+        rows.append((
+            f"table1/{name}",
+            us,
+            f"rate={rate:.0f}x,overhead_vs_axpy={us/base_us:.2f}x",
+        ))
+    return rows

@@ -1,0 +1,51 @@
+"""Large-batch ablation (paper Fig. 5 / Table 3): at a scaled learning rate,
+classic error feedback (beta=1) degrades; the low-pass filter (beta=0.1)
+rescues convergence. Run:
+
+    PYTHONPATH=src python examples/large_batch_lowpass.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import registry
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import TrainLoop, init_train_state, run_training
+
+WORKERS, STEPS, LR = 16, 80, 0.2
+
+
+def train(compressor="clt_k", beta=1.0):
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc = ScaleComConfig(compressor=CompressorConfig(compressor, chunk=64),
+                        beta=beta, min_size=512, warmup_steps=8)
+    opt = make_optimizer("sgdm")
+    sched = schedule.linear_warmup(schedule.constant(LR), 16)
+    loop = TrainLoop(model=model, optimizer=opt, schedule=sched, sc_cfg=sc,
+                     n_workers=WORKERS, log_every=20)
+    state, _ = init_train_state(model, opt, sc, jax.random.PRNGKey(0),
+                                n_workers=WORKERS)
+    batches = make_batches(cfg.vocab, WORKERS, 4, 64, seed=0)
+    _, hist = run_training(loop, state, batches, STEPS)
+    return hist[-1]["loss"]
+
+
+if __name__ == "__main__":
+    print("=== dense baseline (scaled LR) ===")
+    base = train("none")
+    print("=== ScaleCom beta=1 (no filter) ===")
+    nofilter = train("clt_k", beta=1.0)
+    print("=== ScaleCom beta=0.1 (low-pass) ===")
+    lowpass = train("clt_k", beta=0.1)
+    print(f"\nfinal losses: dense={base:.4f}  beta1={nofilter:.4f}  "
+          f"beta0.1={lowpass:.4f}")
+    print(f"low-pass filter recovers {nofilter - lowpass:+.4f} of the "
+          f"no-filter degradation (paper Fig. 5).")

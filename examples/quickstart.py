@@ -1,0 +1,50 @@
+"""Quickstart: train a small LM with ScaleCom gradient compression, then
+compare against the uncompressed baseline — the paper's Table-2 experiment in
+~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import registry
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import TrainLoop, init_train_state, run_training
+
+WORKERS, STEPS = 8, 60
+
+
+def train(compressor: str, chunk: int = 64, beta: float = 1.0):
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc = ScaleComConfig(
+        compressor=CompressorConfig(compressor, chunk=chunk),
+        beta=beta,
+        min_size=512,
+        warmup_steps=5,  # the paper trains a few epochs dense first
+    )
+    opt = make_optimizer("sgdm")
+    loop = TrainLoop(model=model, optimizer=opt, schedule=schedule.constant(0.05),
+                     sc_cfg=sc, n_workers=WORKERS, log_every=20)
+    state, _ = init_train_state(model, opt, sc, jax.random.PRNGKey(0),
+                                n_workers=WORKERS)
+    batches = make_batches(cfg.vocab, WORKERS, 2, 64, seed=0)
+    print(f"--- {compressor} (chunk={chunk}, beta={beta}) ---")
+    _, hist = run_training(loop, state, batches, STEPS)
+    return hist[-1]["loss"]
+
+
+if __name__ == "__main__":
+    dense = train("none")
+    scalecom = train("clt_k", chunk=64, beta=1.0)
+    print(f"\nfinal loss  dense={dense:.4f}  scalecom(64x)={scalecom:.4f}  "
+          f"gap={scalecom - dense:+.4f}")
+    print("ScaleCom trains to ~baseline loss while all-reducing 64x fewer bytes.")

@@ -1,0 +1,16 @@
+"""Serving example: batched prefill + greedy decode across three architecture
+families (dense GQA / RWKV-6 SSM / RG-LRU hybrid) through the same serve API.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    for arch in ("starcoder2-3b", "rwkv6-3b", "recurrentgemma-2b"):
+        print(f"\n=== {arch} ===")
+        main(["--arch", arch, "--batch", "2", "--prompt-len", "32", "--gen", "8"])

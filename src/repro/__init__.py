@@ -1,0 +1,12 @@
+"""repro: ScaleCom (NeurIPS 2020) — scalable sparsified gradient compression,
+reimplemented as a production-grade multi-pod JAX training framework.
+
+Public API surface:
+    repro.core         — CLT-k / compressors / low-pass filter / scalecom_reduce
+    repro.models       — pure-JAX model zoo (dense, MoE, SSM, hybrid, VLM, audio)
+    repro.configs      — assigned architecture configs + input shapes
+    repro.training     — train_step / serve_step / loop
+    repro.launch       — production mesh + dry-run + drivers
+"""
+
+__version__ = "1.0.0"

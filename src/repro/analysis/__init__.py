@@ -1,0 +1,10 @@
+from repro.analysis.hlo import analyze_module, collective_summary
+from repro.analysis.roofline import RooflineReport, analyze_compiled, model_flops
+
+__all__ = [
+    "analyze_module",
+    "collective_summary",
+    "RooflineReport",
+    "analyze_compiled",
+    "model_flops",
+]

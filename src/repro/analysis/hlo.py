@@ -1,0 +1,359 @@
+"""Loop-aware HLO module analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE (verified:
+a scan of 10 matmuls reports 1 matmul of flops), which silently undercounts
+scan-over-layers models by ~L×. This analyzer parses the SPMD-partitioned module
+text (shapes are per-device) and walks the computation graph:
+
+  * while ops      -> body+cond cost × known_trip_count (from backend_config,
+                      falling back to the condition's compare-vs-constant)
+  * fusion / call  -> callee cost (memoized)
+  * dot            -> 2 · numel(output) · prod(lhs contracting dims)
+  * collectives    -> per-device payload bytes + replica groups (explicit or
+                      iota form), classified ICI vs DCN by pod-crossing
+  * HBM bytes      -> per top-level op: output + operand bytes (fusion
+                      granularity ≈ one HBM round-trip per fused kernel)
+
+Everything multiplies correctly through nested loops. This is the source of
+truth for the roofline's three terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ModuleCost", "CollectiveOp", "analyze_module", "collective_summary"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "u4": 1, "s4": 1,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|u4|s4|pred|c64|c128|token)\[([0-9,]*)\]"
+)
+_IOTA_RE = re.compile(r"\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_ZERO_COST_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "bitcast-convert",
+}
+
+
+def _shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    """(numel, bytes) summed over all shapes found in a type string."""
+    numel = total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        total += n * _DTYPE_BYTES[dtype]
+    return numel, total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_local: int
+    group_size: int
+    crosses_pod: bool
+    count: float  # trip-count multiplied
+    line: str
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: List[CollectiveOp] = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: float) -> "ModuleCost":
+        return ModuleCost(
+            self.dot_flops * k,
+            self.hbm_bytes * k,
+            [dataclasses.replace(c, count=c.count * k) for c in self.collectives],
+        )
+
+    def __iadd__(self, other: "ModuleCost"):
+        self.dot_flops += other.dot_flops
+        self.hbm_bytes += other.hbm_bytes
+        self.collectives.extend(other.collectives)
+        return self
+
+
+class _Instr:
+    __slots__ = ("name", "rhs", "op", "result_type", "operands")
+
+    def __init__(self, name: str, rhs: str):
+        self.name = name
+        self.rhs = rhs
+        # result type = leading tuple or shape token(s)
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            self.result_type = rhs[: i + 1]
+            rest = rhs[i + 1 :].strip()
+        else:
+            m = re.match(r"\S+(\{[^}]*\})?", rhs)
+            self.result_type = m.group(0)
+            rest = rhs[m.end() :].strip()
+        om = re.match(r"([\w\-]+)\(", rest)
+        self.op = om.group(1) if om else ""
+        # operand names: inside the first balanced paren group of the op
+        if om:
+            depth, start = 0, om.end() - 1
+            for i in range(start, len(rest)):
+                depth += rest[i] == "("
+                depth -= rest[i] == ")"
+                if depth == 0:
+                    break
+            self.operands = _OPERAND_RE.findall(rest[start : i + 1])
+        else:
+            self.operands = []
+
+
+def _parse_computations(hlo_text: str) -> Tuple[Dict[str, List[_Instr]], Dict[str, Dict[str, str]], Optional[str]]:
+    """Returns (computations, param_types, entry_name)."""
+    comps: Dict[str, List[_Instr]] = {}
+    param_types: Dict[str, Dict[str, str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = hdr.group(1)
+            comps[cur] = []
+            params = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],]+))", hdr.group(2)):
+                params[pm.group(1)] = pm.group(2)
+            param_types[cur] = params
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            comps[cur].append(_Instr(dm.group(1), dm.group(2)))
+    return comps, param_types, entry
+
+
+def _trip_count(instr: _Instr, comps, shapes_of) -> float:
+    m = _TRIP_RE.search(instr.rhs)
+    if m:
+        return float(m.group(1))
+    # fallback: condition compares induction var against a constant
+    cm = re.search(r"condition=%([\w.\-]+)", instr.rhs)
+    if cm and cm.group(1) in comps:
+        for ins in comps[cm.group(1)]:
+            k = re.search(r"constant\((\d+)\)", ins.rhs)
+            if k:
+                return float(k.group(1))
+    return 1.0
+
+
+def _parse_replica_groups(attr: str) -> Optional[np.ndarray]:
+    iota = _IOTA_RE.search(attr)
+    if iota:
+        out_dims = [int(x) for x in iota.group(1).split(",")]
+        reshape_dims = [int(x) for x in iota.group(2).split(",")]
+        ids = np.arange(int(np.prod(reshape_dims))).reshape(reshape_dims)
+        if iota.group(3):
+            perm = [int(x) for x in iota.group(3).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(out_dims)
+    m = re.search(r"replica_groups=\{(\{[0-9, ]+\}(?:,\s*\{[0-9, ]+\})*)\}", attr)
+    if m:
+        groups = [
+            [int(x) for x in g.strip(" {}").split(",") if x.strip()]
+            for g in m.group(1).split("},")
+        ]
+        if groups and all(len(g) == len(groups[0]) for g in groups):
+            return np.asarray(groups)
+    return None
+
+
+def analyze_module(
+    hlo_text: str, *, pod_size: Optional[int] = None
+) -> ModuleCost:
+    comps, param_types, entry = _parse_computations(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # name -> result type, per computation (params included)
+    type_tables: Dict[str, Dict[str, str]] = {}
+    for cname, instrs in comps.items():
+        table = dict(param_types.get(cname, {}))
+        for ins in instrs:
+            table[ins.name] = ins.result_type
+        type_tables[cname] = table
+
+    memo: Dict[str, ModuleCost] = {}
+
+    def cost_of(cname: str) -> ModuleCost:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = ModuleCost()  # break cycles defensively
+        total = ModuleCost()
+        table = type_tables[cname]
+        for ins in comps[cname]:
+            op = ins.op
+            if op in _ZERO_COST_OPS or not op:
+                continue
+            out_numel, out_bytes = _shape_numel_bytes(ins.result_type)
+
+            if op == "while":
+                body = re.search(r"body=%([\w.\-]+)", ins.rhs)
+                cond = re.search(r"condition=%([\w.\-]+)", ins.rhs)
+                trips = _trip_count(ins, comps, None)
+                inner = ModuleCost()
+                if body and body.group(1) in comps:
+                    inner += cost_of(body.group(1))
+                if cond and cond.group(1) in comps:
+                    inner += cost_of(cond.group(1))
+                total += inner.scaled(trips)
+                continue
+
+            if op in ("fusion", "call", "async-start"):
+                cm = re.search(r"calls=%([\w.\-]+)", ins.rhs)
+                to_call = cm.group(1) if cm else None
+                if to_call and to_call in comps:
+                    inner = cost_of(to_call)
+                    # fusions execute on-chip: count their dot flops +
+                    # collectives, but HBM traffic is the fusion boundary
+                    total.dot_flops += inner.dot_flops
+                    total.collectives.extend(inner.collectives)
+                op_bytes = out_bytes
+                for o in ins.operands:
+                    if o in table:
+                        op_bytes += _shape_numel_bytes(table[o])[1]
+                total.hbm_bytes += op_bytes
+                continue
+
+            if op == "conditional":
+                for cm in re.finditer(r"(?:branch_computations=\{|true_computation=|false_computation=)%?([\w.\-]+)", ins.rhs):
+                    if cm.group(1) in comps:
+                        total += cost_of(cm.group(1))
+                total.hbm_bytes += out_bytes
+                continue
+
+            if op == "dot":
+                contract = 1
+                lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
+                if lc and ins.operands:
+                    lhs_t = table.get(ins.operands[0])
+                    dims = _first_shape_dims(lhs_t) if lhs_t else None
+                    if dims is not None and lc.group(1):
+                        for d in lc.group(1).split(","):
+                            di = int(d)
+                            if di < len(dims):
+                                contract *= dims[di]
+                total.dot_flops += 2.0 * out_numel * contract
+                op_bytes = out_bytes
+                for o in ins.operands:
+                    if o in table:
+                        op_bytes += _shape_numel_bytes(table[o])[1]
+                total.hbm_bytes += op_bytes
+                continue
+
+            kind = op.replace("-start", "").replace("-done", "")
+            if kind in _COLLECTIVE_KINDS and not op.endswith("-done"):
+                gs = 1
+                crosses = False
+                rg = None
+                if "replica_groups=" in ins.rhs:
+                    rg = _parse_replica_groups(ins.rhs)
+                if rg is not None:
+                    gs = rg.shape[1]
+                    if pod_size:
+                        pods = rg // pod_size
+                        crosses = bool(np.any(pods != pods[:, :1]))
+                total.collectives.append(
+                    CollectiveOp(kind, out_bytes, gs, crosses, 1.0, ins.rhs[:160])
+                )
+                total.hbm_bytes += out_bytes
+                continue
+
+            # generic op: HBM = output + operands
+            op_bytes = out_bytes
+            for o in ins.operands:
+                if o in table:
+                    op_bytes += _shape_numel_bytes(table[o])[1]
+            total.hbm_bytes += op_bytes
+
+        memo[cname] = total
+        return total
+
+    return cost_of(entry)
+
+
+def collective_summary(cost: ModuleCost) -> Dict[str, float]:
+    """Per-device traffic model (ring algorithms):
+
+      all-reduce:         2 · B · (g-1)/g
+      all-gather:         B_out · (g-1)/g
+      reduce-scatter:     B_out · (g-1)        (result is already 1/g)
+      all-to-all:         B · (g-1)/g
+      collective-permute: B
+    """
+    out = {"n_ops": 0.0, "ici_bytes": 0.0, "dcn_bytes": 0.0}
+    by_kind: Dict[str, float] = {}
+    for op in cost.collectives:
+        g = max(op.group_size, 1)
+        if op.kind == "all-reduce":
+            traffic = 2.0 * op.bytes_local * (g - 1) / g
+        elif op.kind == "all-gather":
+            traffic = op.bytes_local * (g - 1) / g
+        elif op.kind == "reduce-scatter":
+            traffic = op.bytes_local * (g - 1)
+        elif op.kind == "all-to-all":
+            traffic = op.bytes_local * (g - 1) / g
+        else:
+            traffic = float(op.bytes_local)
+        traffic *= op.count
+        out["n_ops"] += op.count
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + traffic
+        if op.crosses_pod:
+            out["dcn_bytes"] += traffic
+        else:
+            out["ici_bytes"] += traffic
+    out.update({f"bytes_{k}": v for k, v in by_kind.items()})
+    out["total_bytes"] = out["ici_bytes"] + out["dcn_bytes"]
+    return out

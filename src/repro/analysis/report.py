@@ -1,0 +1,116 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str) -> List[Dict]:
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        tag = os.path.basename(f).rsplit("__", 1)[-1].replace(".json", "")
+        r["tag"] = tag if tag not in ("pod1", "pod2", "scalecom", "dense") else ""
+        # serve shapes lowered under either --mode produce identical runs;
+        # dedupe on content key
+        rows[(r["arch"], r["shape"], r["mesh"], r["mode"], r["tag"])] = r
+    return list(rows.values())
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.2f}M"
+    return f"{b:.0f}"
+
+
+def roofline_table(rows: List[Dict], mesh: str, mode: str) -> str:
+    out = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | peak_mem/dev | DCN |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    sel = [r for r in rows if r["mesh"] == mesh and r["mode"] in (mode, "serve")]
+    sel.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    for r in sel:
+        pm = r.get("peak_memory_per_device")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | {r['dominant']} | "
+            f"{r['useful_flop_ratio']:.3f} | "
+            f"{fmt_bytes(pm) if pm else 'n/a'} | {fmt_bytes(r['dcn_bytes'])} |"
+        )
+    return "\n".join(out)
+
+
+def compile_table(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | mode | lower_s | compile_s | HLO flops/dev | HBM bytes/dev | ICI bytes/dev |",
+        "|---|---|---|---|---:|---:|---:|---:|---:|",
+    ]
+    rows = sorted(rows, key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]), r["mesh"], r["mode"]))
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} | "
+            f"{r.get('lower_s', 0):.1f} | {r.get('compile_s', 0):.1f} | "
+            f"{r['hlo_flops']:.3e} | {fmt_bytes(r['hlo_bytes'])} | "
+            f"{fmt_bytes(r['ici_bytes'])} |"
+        )
+    return "\n".join(out)
+
+
+def comm_comparison(rows: List[Dict]) -> str:
+    """ScaleCom vs dense gradient traffic per train step (the headline)."""
+    out = [
+        "| arch | mesh | scalecom ICI+DCN | dense ICI+DCN | ratio |",
+        "|---|---|---:|---:|---:|",
+    ]
+    by_key = {}
+    for r in rows:
+        if r["shape"] != "train_4k" or r.get("tag"):
+            continue
+        by_key[(r["arch"], r["mesh"], r["mode"])] = r
+    for (arch, mesh, mode), r in sorted(by_key.items()):
+        if mode != "scalecom":
+            continue
+        d = by_key.get((arch, mesh, "dense"))
+        if not d:
+            continue
+        sc = r["ici_bytes"] + r["dcn_bytes"]
+        dn = d["ici_bytes"] + d["dcn_bytes"]
+        out.append(
+            f"| {arch} | {mesh} | {fmt_bytes(sc)} | {fmt_bytes(dn)} | "
+            f"{dn/max(sc,1):.2f}x |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(f"## Dry-run compile table ({len(rows)} runs)\n")
+    print(compile_table(rows))
+    for mesh in ("pod1", "pod2"):
+        print(f"\n## Roofline — {mesh} (scalecom/serve)\n")
+        print(roofline_table(rows, mesh, "scalecom"))
+    print("\n## ScaleCom vs dense gradient traffic (train_4k)\n")
+    print(comm_comparison(rows))
+
+
+if __name__ == "__main__":
+    main()

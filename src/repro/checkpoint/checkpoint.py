@@ -1,0 +1,77 @@
+"""Pytree checkpointing: flat-key npz payload + json manifest.
+
+Saves any pytree of arrays (params, optimizer state, ScaleCom residues) with the
+tree structure serialized separately so restore round-trips exactly — including
+dtypes like bfloat16 / float8_e4m3fn (stored via a raw-bytes view + dtype tag,
+since npz has no native support for them).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+__all__ = ["save", "restore", "latest_step"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def save(directory: str, step: int, tree: Pytree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    payload = {}
+    dtypes = {}
+    for k, v in flat.items():
+        dtypes[k] = str(v.dtype)
+        if v.dtype in (np.dtype("bfloat16"), np.dtype("float8_e4m3fn")):
+            payload[k] = v.view(np.uint8 if v.dtype.itemsize == 1 else np.uint16)
+        else:
+            payload[k] = v
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez_compressed(path, **{k.replace("/", "\\"): v for k, v in payload.items()})
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(directory, _MANIFEST), "w") as f:
+        json.dump(
+            {"step": step, "treedef": str(treedef), "dtypes": dtypes, "file": path},
+            f,
+        )
+    return path
+
+
+def restore(directory: str, like: Pytree, step: int | None = None) -> Pytree:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    if step is None:
+        step = latest_step(directory)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as z:
+        data = {k.replace("\\", "/"): z[k] for k in z.files}
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)
+    dtypes = manifest["dtypes"]
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_t, leaf in flat_like[0]:
+        k = jax.tree_util.keystr(path_t)
+        v = data[k]
+        want = np.dtype(dtypes[k])
+        if str(v.dtype) != dtypes[k]:
+            v = v.view(want)
+        assert v.shape == leaf.shape, f"{k}: {v.shape} != {leaf.shape}"
+        leaves.append(v)
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves)
+
+
+def latest_step(directory: str) -> int:
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        return json.load(f)["step"]

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ArchConfig,
+    CompressionSettings,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+)
+from repro.configs.registry import ASSIGNED_ARCHS, all_archs, arch, shape, smoke
+
+__all__ = [
+    "ArchConfig",
+    "CompressionSettings",
+    "RunConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ASSIGNED_ARCHS",
+    "all_archs",
+    "arch",
+    "shape",
+    "smoke",
+]

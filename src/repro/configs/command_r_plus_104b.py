@@ -1,0 +1,29 @@
+"""command-r-plus-104b — dense, GQA (96H/8kv), no biases
+[hf:CohereForAI/c4ai-command-r-v01]. Large enough that the fp8 residue codec /
+hierarchical ScaleCom matter (DESIGN.md §5)."""
+
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="command-r-plus-104b",
+    arch_type="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab=256000,
+    citation="hf:CohereForAI/c4ai-command-r-v01",
+)
+
+SMOKE = ArchConfig(
+    name="command-r-smoke",
+    arch_type="dense",
+    n_layers=2,
+    d_model=192,
+    n_heads=6,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab=512,
+    citation="reduced variant of hf:CohereForAI/c4ai-command-r-v01",
+)

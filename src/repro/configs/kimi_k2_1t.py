@@ -1,0 +1,37 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE, 384 experts top-8 (paper-table entry)
+[arXiv:2501.kimi2]. Fine-grained experts (d_ff=2048 per expert).
+
+Note (DESIGN.md §5): single-pod training of this arch exceeds HBM regardless of
+compression; ScaleCom applies hierarchically over the pod axis on the multi-pod
+mesh. Dry-run lowers/compiles either way and the memory analysis records it.
+"""
+
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163840,
+    n_experts=384,
+    moe_topk=8,
+    citation="arXiv:2501.kimi2",
+)
+
+SMOKE = ArchConfig(
+    name="kimi-k2-smoke",
+    arch_type="moe",
+    n_layers=2,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=64,
+    vocab=512,
+    n_experts=4,
+    moe_topk=2,
+    citation="reduced variant of arXiv:2501.kimi2",
+)

@@ -1,0 +1,31 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE [hf:microsoft/Phi-3.5-MoE-instruct]."""
+
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    arch_type="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab=32064,
+    n_experts=16,
+    moe_topk=2,
+    citation="hf:microsoft/Phi-3.5-MoE-instruct",
+)
+
+SMOKE = ArchConfig(
+    name="phi3.5-moe-smoke",
+    arch_type="moe",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab=512,
+    n_experts=4,
+    moe_topk=2,
+    citation="reduced variant of hf:microsoft/Phi-3.5-MoE-instruct",
+)

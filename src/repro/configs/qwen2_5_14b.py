@@ -1,0 +1,29 @@
+"""qwen2.5-14b — dense, GQA, QKV bias [hf:Qwen/Qwen2.5-0.5B family scaling]."""
+
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="qwen2.5-14b",
+    arch_type="dense",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab=152064,
+    qkv_bias=True,
+    citation="hf:Qwen/Qwen2.5-0.5B",
+)
+
+SMOKE = ArchConfig(
+    name="qwen2.5-smoke",
+    arch_type="dense",
+    n_layers=2,
+    d_model=160,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=384,
+    vocab=512,
+    qkv_bias=True,
+    citation="reduced variant of hf:Qwen/Qwen2.5-0.5B",
+)

@@ -1,0 +1,43 @@
+"""whisper-medium — encoder-decoder audio backbone [arXiv:2212.04356].
+
+Mel-spectrogram + conv frontend is STUBBED (assignment carve-out): the encoder
+consumes precomputed frame embeddings (B, encoder_seq, d_model). LayerNorm +
+GELU MLP + learned/sinusoidal positions, full MHA (kv=16 == heads).
+
+Assigned decode shapes exceed Whisper's native 448 text positions; positional
+handling is sinusoidal so the backbone honors the assigned shapes (DESIGN.md §7).
+"""
+
+from repro.configs.base import ArchConfig
+
+ARCH = ArchConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    encoder_layers=24,
+    encoder_seq=1500,
+    norm="layernorm",
+    qkv_bias=True,
+    citation="arXiv:2212.04356",
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke",
+    arch_type="audio",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    vocab=512,
+    encoder_layers=2,
+    encoder_seq=64,
+    norm="layernorm",
+    qkv_bias=True,
+    citation="reduced variant of arXiv:2212.04356",
+)

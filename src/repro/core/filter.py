@@ -1,0 +1,37 @@
+"""Low-pass filtered local-memory (error-feedback residue) update — paper Eq. (5).
+
+    m^{t+1} = (1-beta) m^t + beta (m^t + g^t - ghat^t)
+            = m^t + beta (g^t - ghat^t)
+
+beta = 1 recovers classic error feedback (Seide/Strom/AdaComp/DGC); beta ≈ 0.1 is the
+paper's large-batch setting, attenuating the gradient noise injected by scaled
+learning rates (admissible band given by Theorem 1, Eq. 9).
+
+``ghat`` here is the *worker's own* compressed tensor CLT_k(m + g) — the entries it
+contributed to the all-reduce — so at selected positions the residue decays to
+(1-beta) m and at unselected positions it integrates beta * g.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lowpass_update", "beta_band"]
+
+
+def lowpass_update(
+    m: jnp.ndarray, g: jnp.ndarray, ghat_own: jnp.ndarray, beta: float
+) -> jnp.ndarray:
+    """One low-pass-filtered residue update (Eq. 5)."""
+    return m + beta * (g - ghat_own)
+
+
+def beta_band(gamma: float) -> tuple[float, float]:
+    """Admissible (lo, hi) band for the discounting factor beta given the
+    contraction coefficient gamma (Theorem 1, Eq. 9)."""
+    import math
+
+    s = math.sqrt(max(0.0, 1.0 - gamma * gamma))
+    lo = (1.0 + gamma - s) / (2.0 * (1.0 + gamma))
+    hi = (1.0 + gamma + s) / (2.0 * (1.0 + gamma))
+    return lo, hi

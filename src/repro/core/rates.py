@@ -1,0 +1,71 @@
+"""Per-layer compression-rate selection — the paper's §4 engineering guidance.
+
+The paper sets each layer's compression rate from its FLOPs/gradient-size
+ratio (per-worker minibatch):
+
+    ratio in [196, inf)  -> 25x
+    ratio in [128, 196)  -> 50x
+    ratio in (0, 128)    -> 400x
+
+plus: the first (input) layer is never compressed (most sensitive).
+
+For transformer matmuls the ratio is uniform (2 * tokens_per_worker for every
+weight): the guidance was calibrated on CNNs where spatial weight reuse varies
+per layer. We therefore implement the general mechanism — per-tensor
+CompressorConfig overrides resolved by path pattern and by the ratio rule —
+and note that for the assigned LM architectures the ratio rule selects a
+single rate (tokens/worker >= 196 -> the conservative 25x tier), while
+embeddings/lm-head get their own tier (gradient-sparse, reuse = tokens/vocab).
+
+Used by scalecom_reduce via ScaleComConfig.rate_rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+from repro.core.compressors import CompressorConfig
+
+__all__ = ["RateRule", "resolve_compressor", "paper_guidance_chunk", "PAPER_TIERS"]
+
+# (ratio_lower_bound, compression rate) — paper §4
+PAPER_TIERS: Tuple[Tuple[float, float], ...] = ((196.0, 25.0), (128.0, 50.0), (0.0, 400.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class RateRule:
+    """First matching pattern wins. chunk=None means: do not compress."""
+
+    pattern: str
+    chunk: Optional[int]
+    topm: int = 1
+
+
+def resolve_compressor(
+    path: str,
+    base: CompressorConfig,
+    rules: Sequence[RateRule],
+) -> Optional[CompressorConfig]:
+    """CompressorConfig for one tensor, or None => dense reduction."""
+    for rule in rules:
+        if re.search(rule.pattern, path):
+            if rule.chunk is None:
+                return None
+            return dataclasses.replace(base, chunk=rule.chunk, topm=rule.topm)
+    return base
+
+
+def paper_guidance_chunk(flops_per_grad: float) -> int:
+    """Chunk size (= rate at topm=1) from the paper's FLOPs/gradient tiers."""
+    for lo, rate in PAPER_TIERS:
+        if flops_per_grad >= lo:
+            return int(rate)
+    return int(PAPER_TIERS[-1][1])
+
+
+def lm_flops_per_grad(tokens_per_worker: int) -> float:
+    """Uniform matmul ratio for transformer weights: 2 x tokens/worker
+    (fwd; the paper's table is calibrated on fwd FLOPs per element)."""
+    return 2.0 * tokens_per_worker

@@ -1,0 +1,233 @@
+"""ScaleCom optimizer-adjacent state: per-worker error-feedback residues.
+
+The residue ("local memory") is the only persistent state the algorithm adds.
+For a model with P parameters and n data-parallel workers it is n·P elements —
+the binding memory cost at scale (DESIGN.md §5). This module provides:
+
+  * ``init_state``      — zero residues per tensor
+  * residue codecs      — fp32 / bf16 / fp8(e4m3, scaled) storage
+                          (fp8 is a beyond-paper memory optimization; the
+                          residue tolerates quantization because it is itself
+                          an error accumulator — quantization error is re-fed
+                          next step)
+
+Residue storage layout follows ScaleComConfig.layout:
+
+  flat     — (n_workers, size) per tensor (paper-faithful flat buffer). fp8
+             uses one fp32 scale per 512 elements.
+  rowwise  — (n_workers, R, C) preserving the tensor's last dim (C), so the
+             residue shares the parameter's sharding and the compression step
+             never reshards (see core.chunked row-wise ops). fp8 uses one
+             fp32 scale per row.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+Pytree = Any
+Shape = Tuple[int, ...]
+
+__all__ = [
+    "ResidueCodec",
+    "CODECS",
+    "ScaleComState",
+    "init_state",
+    "residue_bytes",
+    "storage_shape",
+]
+
+_FP8_MAX = 448.0  # e4m3 finite max
+_FP8_CHUNK = 512  # flat-layout scale granularity
+
+
+def storage_shape(param_shape: Shape, layout: str) -> Shape:
+    """Residue storage shape (without the worker axis) for one tensor.
+
+    rowwise keeps the FULL parameter shape: the residue then inherits the
+    parameter's exact sharding (expert/heads/mlp dims included) and every
+    compression op (last-dim chunking) is sharding-preserving. Collapsing to
+    (R, C) was measurably worse for expert-sharded tensors — the merged
+    leading dim can't carry the expert-axis sharding (see EXPERIMENTS §Perf).
+    """
+    size = int(np.prod(param_shape)) if len(param_shape) else 1
+    if layout == "flat":
+        return (size,)
+    if layout == "rowwise":
+        if len(param_shape) == 0:
+            return (1,)
+        return tuple(param_shape)
+    raise ValueError(layout)
+
+
+class ResidueCodec:
+    """Encode/decode an (n, *storage) fp32 residue."""
+
+    name: str = "fp32"
+
+    def init(self, n: int, shape: Shape) -> Pytree:
+        return {"q": jnp.zeros((n,) + shape, jnp.float32)}
+
+    def decode(self, enc: Pytree, shape: Shape) -> Array:
+        del shape
+        return enc["q"]
+
+    def encode(self, m: Array, shape: Shape) -> Pytree:
+        del shape
+        return {"q": m}
+
+    def nbytes(self, n: int, shape: Shape) -> int:
+        return n * int(np.prod(shape)) * 4
+
+
+class _Bf16Codec(ResidueCodec):
+    name = "bf16"
+
+    def init(self, n, shape):
+        return {"q": jnp.zeros((n,) + shape, jnp.bfloat16)}
+
+    def decode(self, enc, shape):
+        del shape
+        return enc["q"].astype(jnp.float32)
+
+    def encode(self, m, shape):
+        del shape
+        return {"q": m.astype(jnp.bfloat16)}
+
+    def nbytes(self, n, shape):
+        return n * int(np.prod(shape)) * 2
+
+
+class _Fp8Codec(ResidueCodec):
+    """e4m3 residue.
+
+    flat (n, size): one fp32 scale per _FP8_CHUNK elements (size padded).
+    rowwise (n, R, C): one fp32 scale per row — stays in the param layout.
+    """
+
+    name = "fp8"
+
+    @staticmethod
+    def _padded(size: int) -> int:
+        return -(-size // _FP8_CHUNK) * _FP8_CHUNK
+
+    def init(self, n, shape):
+        if len(shape) == 1:
+            p = self._padded(shape[0])
+            return {
+                "q": jnp.zeros((n, p), jnp.float8_e4m3fn),
+                "scale": jnp.zeros((n, p // _FP8_CHUNK), jnp.float32),
+            }
+        return {
+            "q": jnp.zeros((n,) + shape, jnp.float8_e4m3fn),
+            "scale": jnp.zeros((n,) + shape[:-1], jnp.float32),
+        }
+
+    def decode(self, enc, shape):
+        q, scale = enc["q"], enc["scale"]
+        if len(shape) == 1:
+            n, p = q.shape
+            x = q.astype(jnp.float32).reshape(n, -1, _FP8_CHUNK)
+            x = x * scale[..., None]
+            return x.reshape(n, p)[:, : shape[0]]
+        return q.astype(jnp.float32) * scale[..., None]
+
+    def encode(self, m, shape):
+        if len(shape) == 1:
+            n = m.shape[0]
+            p = self._padded(shape[0])
+            mp = jnp.pad(m, ((0, 0), (0, p - shape[0]))).reshape(n, -1, _FP8_CHUNK)
+            amax = jnp.max(jnp.abs(mp), axis=-1)
+            scale = jnp.where(amax > 0, amax / _FP8_MAX, 1.0)
+            q = (mp / scale[..., None]).astype(jnp.float8_e4m3fn)
+            return {"q": q.reshape(n, p), "scale": scale}
+        amax = jnp.max(jnp.abs(m), axis=-1)
+        scale = jnp.where(amax > 0, amax / _FP8_MAX, 1.0)
+        q = (m / scale[..., None]).astype(jnp.float8_e4m3fn)
+        return {"q": q, "scale": scale}
+
+    def nbytes(self, n, shape):
+        size = int(np.prod(shape))
+        if len(shape) == 1:
+            p = self._padded(size)
+            return n * (p + 4 * p // _FP8_CHUNK)
+        return n * (size + 4 * size // shape[-1])
+
+
+CODECS: Dict[str, ResidueCodec] = {
+    "fp32": ResidueCodec(),
+    "bf16": _Bf16Codec(),
+    "fp8": _Fp8Codec(),
+}
+
+
+@dataclasses.dataclass
+class ScaleComState:
+    """Pytree-registered container: per-tensor encoded residues + step counter."""
+
+    residues: Dict[str, Pytree]  # path -> codec-encoded residue
+    t: Array  # int32 step counter (drives the cyclic leader)
+
+    def tree_flatten(self):
+        return (self.residues, self.t), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    ScaleComState,
+    ScaleComState.tree_flatten,
+    lambda aux, ch: ScaleComState(*ch),
+)
+
+
+def _flat_paths(params: Pytree) -> Dict[str, Array]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def init_state(
+    params: Pytree,
+    n_workers: int,
+    residue_dtype: str = "fp32",
+    min_size: int = 2048,
+    layout: str = "flat",
+) -> ScaleComState:
+    """Zero-initialized ScaleCom state for a parameter pytree.
+
+    Tensors below ``min_size`` carry no residue: they are always reduced
+    densely (norm scales, biases). Must match ScaleComConfig at train time.
+    """
+    codec = CODECS[residue_dtype]
+    residues = {}
+    for path, leaf in _flat_paths(params).items():
+        size = int(np.prod(leaf.shape)) if len(leaf.shape) else 1
+        if size < min_size:
+            continue
+        residues[path] = codec.init(n_workers, storage_shape(leaf.shape, layout))
+    return ScaleComState(residues=residues, t=jnp.zeros((), jnp.int32))
+
+
+def residue_bytes(
+    params: Pytree,
+    n_workers: int,
+    residue_dtype: str = "fp32",
+    min_size: int = 2048,
+    layout: str = "flat",
+) -> int:
+    codec = CODECS[residue_dtype]
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        size = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        if size >= min_size:
+            total += codec.nbytes(n_workers, storage_shape(leaf.shape, layout))
+    return total

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, make_batches
+
+__all__ = ["SyntheticLM", "make_batches"]

@@ -1,0 +1,89 @@
+"""Data pipeline: deterministic synthetic corpora + worker-axis batching.
+
+Offline container => no real datasets; the pipeline generates *learnable*
+synthetic token streams (a mixture of k-gram Markov chains with a fixed seeded
+transition structure) so convergence experiments measure real learning, not
+noise-fitting. The same iterator drives training, the paper-fidelity benchmarks,
+and the examples.
+
+Batches are emitted worker-stacked: {"tokens": (n_workers, local_B, S), ...} —
+the layout the ScaleCom train step shards over the mesh "data" axis. Each worker
+draws from a disjoint slice of the stream (i.i.d. shards of one distribution,
+matching the paper's fully-synchronized single-distribution setting, §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "make_batches"]
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    """Order-1 Markov token source with heavy-tailed transitions."""
+
+    vocab: int
+    seed: int = 0
+    branching: int = 16  # successors per token
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.succ = rng.integers(0, self.vocab, size=(self.vocab, self.branching))
+        probs = rng.dirichlet(np.full(self.branching, 0.3), size=self.vocab)
+        self.cum = np.cumsum(probs, axis=1)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq + 1), np.int32)
+        cur = rng.integers(0, self.vocab, size=batch)
+        out[:, 0] = cur
+        for t in range(1, seq + 1):
+            u = rng.random(batch)[:, None]
+            choice = (u > self.cum[cur]).sum(axis=1)
+            cur = self.succ[cur, np.minimum(choice, self.branching - 1)]
+            out[:, t] = cur
+        return out
+
+
+def make_batches(
+    vocab: int,
+    n_workers: int,
+    local_batch: int,
+    seq_len: int,
+    *,
+    seed: int = 0,
+    vision_tokens: int = 0,
+    d_model: int = 0,
+    encoder_seq: int = 0,
+    steps: Optional[int] = None,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields worker-stacked training batches.
+
+    tokens/labels: (n, local_B, S) int32; mask ones. VLM adds "vision"
+    (n, local_B, vision_tokens, d_model); enc-dec adds "frames"
+    (n, local_B, encoder_seq, d_model) — stub embeddings (assignment carve-out).
+    """
+    src = SyntheticLM(vocab, seed=seed)
+    step = 0
+    while steps is None or step < steps:
+        batch_rng = np.random.default_rng((seed, step))
+        toks = src.sample(batch_rng, n_workers * local_batch, seq_len)
+        toks = toks.reshape(n_workers, local_batch, seq_len + 1)
+        out: Dict[str, np.ndarray] = {
+            "tokens": toks[..., :-1],
+            "labels": toks[..., 1:],
+            "mask": np.ones((n_workers, local_batch, seq_len), np.float32),
+        }
+        if vision_tokens:
+            out["vision"] = batch_rng.standard_normal(
+                (n_workers, local_batch, vision_tokens, d_model), dtype=np.float32
+            )
+        if encoder_seq:
+            out["frames"] = batch_rng.standard_normal(
+                (n_workers, local_batch, encoder_seq, d_model), dtype=np.float32
+            )
+        yield out
+        step += 1

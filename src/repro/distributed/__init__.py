@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    constrain,
+    mesh_context,
+    rules_for_policy,
+    shardings_for_axes,
+    specs_for_axes,
+)
+
+__all__ = [
+    "constrain",
+    "mesh_context",
+    "rules_for_policy",
+    "shardings_for_axes",
+    "specs_for_axes",
+]

@@ -1,0 +1,153 @@
+"""Logical-axis → mesh-axis sharding rules (t5x-style, minimal).
+
+Models annotate every parameter with logical axis names (repro.models.common).
+``specs_for_axes`` turns those into PartitionSpecs for a given policy:
+
+  tp    — tensor parallel: vocab/heads/mlp/experts over "model"; everything else
+          replicated. Data parallelism is carried by the worker axis of the
+          training step (vmap spmd_axis_name="data"), not by param sharding.
+  fsdp  — tp + the "embed" (d_model) dim sharded over "data" — fully-sharded
+          params for the 100B+ archs (DESIGN.md §5).
+
+Dims that are smaller than the mesh axis stay replicated (GSPMD would pad > 2x).
+Non-divisible-but-larger dims are allowed — GSPMD pads; the waste shows up in the
+roofline's MODEL_FLOPS/HLO_FLOPS ratio and is reported, not hidden.
+
+Activation hints: ``activation_spec(kind)`` gives canonical specs for batch/seq
+layouts used by the serve path (the train path shards its worker axis through
+``vmap(..., spmd_axis_name="data")``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+__all__ = [
+    "TP_RULES",
+    "FSDP_RULES",
+    "rules_for_policy",
+    "specs_for_axes",
+    "shardings_for_axes",
+    "mesh_context",
+    "current_mesh",
+    "constrain",
+]
+
+TP_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "embed": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+    None: None,
+}
+
+FSDP_RULES = dict(TP_RULES, embed="data")
+
+# pure data parallel: params fully replicated — the paper's own GPU-cluster
+# regime, where gradient sync is the only cross-worker traffic. Used by the
+# §Perf gradient-traffic-isolation runs (worker axis = all mesh axes).
+DP_RULES = {k: None for k in TP_RULES}
+
+
+def rules_for_policy(policy: str):
+    if policy == "tp":
+        return TP_RULES
+    if policy == "fsdp":
+        return FSDP_RULES
+    if policy == "dp":
+        return DP_RULES
+    raise ValueError(f"unknown sharding policy {policy!r}")
+
+
+def _axis_size(mesh: Optional[Mesh], name: Optional[str]) -> int:
+    if mesh is None or name is None or name not in mesh.axis_names:
+        return 0  # axis absent from this mesh -> cannot shard on it
+    return mesh.shape[name]
+
+
+def _spec_for(axes, rules, mesh: Optional[Mesh], shape) -> P:
+    entries = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax, None)
+        if mesh_ax is None or mesh_ax in used:
+            entries.append(None)
+            continue
+        size = _axis_size(mesh, mesh_ax)
+        # jit *argument* shardings require exact divisibility (GSPMD pads
+        # only internal constraints, not inputs) — replicate otherwise.
+        # size==0: axis not present in this mesh.
+        if size == 0 or (size > 1 and dim % size != 0):
+            entries.append(None)
+        else:
+            entries.append(mesh_ax)
+            used.add(mesh_ax)
+    return P(*entries)
+
+
+def specs_for_axes(params: Pytree, axes: Pytree, policy: str, mesh: Optional[Mesh]) -> Pytree:
+    """PartitionSpec pytree matching ``params`` given logical ``axes``."""
+    rules = rules_for_policy(policy)
+    return jax.tree.map(
+        lambda p, ax: _spec_for(ax, rules, mesh, p.shape),
+        params,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def shardings_for_axes(params, axes, policy, mesh: Mesh) -> Pytree:
+    specs = specs_for_axes(params, axes, policy, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# --- activation constraint context ------------------------------------------
+
+_MESH_CTX: contextvars.ContextVar = contextvars.ContextVar("repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    """Makes ``constrain`` active inside model code (no-op when unset)."""
+    token = _MESH_CTX.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH_CTX.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH_CTX.get()
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint if a mesh context is active; identity otherwise.
+
+    spec entries may name mesh axes directly (e.g. "data", "model", None); axes
+    absent from the active mesh are dropped to None so the same model code runs
+    on 1-device CPU tests and on the production mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    fixed = tuple(e if (e in names) else None for e in spec_entries)
+    if len(fixed) < x.ndim:
+        fixed = fixed + (None,) * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

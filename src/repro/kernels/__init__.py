@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for ScaleCom's compute hot spot (chunk-wise selection,
+Table 1: ~3 FLOPs/element) and the fused residue update.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper with
+CPU interpret fallback), ref.py (pure-jnp oracle).
+"""

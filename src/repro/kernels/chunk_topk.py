@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: chunk-wise magnitude arg-max selection.
+
+This is the paper's compute hot spot: Table 1 prices ScaleCom's compressor at
+~3 FLOPs/element of "chunk-wise sort" (GPU quasi-sort, [39]); the leader runs it
+over its full error-feedback gradient every step and every worker runs the
+gather at the selected offsets.
+
+TPU adaptation (DESIGN.md §2): instead of porting a GPU bitonic sorting network,
+the chunked top-1 selection is phrased as a *lane-local arg-max over a 2-D VMEM
+tile*. The flat gradient is viewed as (n_chunks, chunk); the kernel streams
+(BLOCK_CHUNKS, chunk) tiles HBM->VMEM and emits per-chunk (argmax, value) pairs.
+All reductions are along the minor (lane) axis, the natural VPU reduction
+direction: no data-dependent control flow, no cross-lane shuffles, MXU not
+needed. chunk and BLOCK_CHUNKS are picked so tiles are (8,128)-aligned.
+
+The same grid also powers ``chunk_gather`` (values at given offsets) and the
+fused residue update lives in repro.kernels.ef_update.
+
+Validated against repro.kernels.ref in interpret mode (CPU) over a shape/dtype
+sweep — see tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["chunk_argmax_pallas", "chunk_gather_pallas"]
+
+# Tile geometry: (BLOCK_CHUNKS, chunk) tiles; BLOCK_CHUNKS rows of the chunk
+# view are processed per grid step. 8 sublanes x 128 lanes is the fp32 VREG
+# tile; chunk sizes of 128+ keep lanes full, BLOCK_CHUNKS=256 gives 128KiB
+# fp32 tiles — comfortably inside the ~16 MiB VMEM budget with double
+# buffering.
+BLOCK_CHUNKS = 256
+
+
+def _argmax_kernel(x_ref, idx_ref, val_ref):
+    """x: (B, C) tile -> idx/val: (B,) per-chunk magnitude arg-max."""
+    x = x_ref[...]
+    mag = jnp.abs(x)
+    idx = jnp.argmax(mag, axis=-1).astype(jnp.int32)
+    idx_ref[...] = idx
+    val_ref[...] = jnp.take_along_axis(x, idx[:, None], axis=-1)[:, 0]
+
+
+def _gather_kernel(x_ref, idx_ref, val_ref):
+    """x: (B, C), idx: (B,) -> val: (B,) gather at per-chunk offsets."""
+    x = x_ref[...]
+    idx = idx_ref[...]
+    val_ref[...] = jnp.take_along_axis(x, idx[:, None], axis=-1)[:, 0]
+
+
+def _grid(n_chunks: int) -> int:
+    return -(-n_chunks // BLOCK_CHUNKS)
+
+
+def _pad_rows(x2d: jnp.ndarray) -> jnp.ndarray:
+    n = x2d.shape[0]
+    pad = (-n) % BLOCK_CHUNKS
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def chunk_argmax_pallas(x: jnp.ndarray, chunk: int, *, interpret: bool = True):
+    """Per-chunk (indices, values) of a flat array. Returns ((n_chunks,) i32,
+    (n_chunks,) x.dtype). interpret=True executes on CPU (the container has no
+    TPU); on TPU pass interpret=False.
+    """
+    n = x.shape[-1]
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    xp = jnp.pad(x.reshape(-1), (0, pad)).reshape(n_chunks, chunk)
+    xp = _pad_rows(xp)
+    rows = xp.shape[0]
+    grid = _grid(rows)
+    idx, val = pl.pallas_call(
+        _argmax_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows,), jnp.int32),
+            jax.ShapeDtypeStruct((rows,), x.dtype),
+        ],
+        interpret=interpret,
+    )(xp)
+    return idx[:n_chunks], val[:n_chunks]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def chunk_gather_pallas(
+    x: jnp.ndarray, idx: jnp.ndarray, chunk: int, *, interpret: bool = True
+):
+    """Gather per-chunk values of flat ``x`` at offsets ``idx`` (n_chunks,)."""
+    n = x.shape[-1]
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    xp = jnp.pad(x.reshape(-1), (0, pad)).reshape(n_chunks, chunk)
+    xp = _pad_rows(xp)
+    rows = xp.shape[0]
+    idxp = jnp.pad(idx, (0, rows - n_chunks))
+    grid = _grid(rows)
+    val = pl.pallas_call(
+        _gather_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), x.dtype),
+        interpret=interpret,
+    )(xp, idxp)
+    return val[:n_chunks]

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused error-feedback residue update (beyond-paper).
+
+Per step, for each worker and each chunk c of its error-feedback gradient
+ef = m + g, ScaleCom needs:
+
+    vals[c]   = ef[c, idx[c]]                    (contribution to the reduce)
+    m'[c, j]  = m[c, j] + beta*(g[c, j] - vals[c]*[j == idx[c]])   (Eq. 5)
+
+Unfused HLO runs 3+ passes over the gradient (add, gather, scatter, axpy) —
+each HBM-bandwidth bound. This kernel does one read of (m, g, idx) and one
+write of (m', vals) per tile: ~2.3x less HBM traffic for the residue update,
+which matters because the residue array is n_workers x P — the largest state
+in the system. Tiles are (BLOCK_CHUNKS, chunk) in VMEM like chunk_topk.
+
+Validated against the pure-jnp oracle in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.chunk_topk import BLOCK_CHUNKS
+
+__all__ = ["ef_update_pallas"]
+
+
+def _ef_update_kernel(beta_ref, m_ref, g_ref, idx_ref, m_out_ref, val_ref):
+    beta = beta_ref[0]
+    m = m_ref[...]
+    g = g_ref[...]
+    idx = idx_ref[...]
+    ef = m + g
+    vals = jnp.take_along_axis(ef, idx[:, None], axis=-1)[:, 0]
+    # ghat_own = vals scattered at idx; m' = m + beta*(g - ghat_own)
+    cols = jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+    onehot = cols == idx[:, None]
+    m_out_ref[...] = m + beta * (g - jnp.where(onehot, ef, 0.0))
+    val_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ef_update_pallas(
+    m: jnp.ndarray,
+    g: jnp.ndarray,
+    idx: jnp.ndarray,
+    beta: float,
+    chunk: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused residue update for one worker's flat tensors.
+
+    m, g: (size,) fp32; idx: (n_chunks,) int32 shared indices.
+    Returns (m_new (size,), vals (n_chunks,)).
+    """
+    n = m.shape[-1]
+    n_chunks = -(-n // chunk)
+    pad = n_chunks * chunk - n
+    mp = jnp.pad(m.reshape(-1), (0, pad)).reshape(n_chunks, chunk)
+    gp = jnp.pad(g.reshape(-1), (0, pad)).reshape(n_chunks, chunk)
+    rpad = (-n_chunks) % BLOCK_CHUNKS
+    if rpad:
+        mp = jnp.pad(mp, ((0, rpad), (0, 0)))
+        gp = jnp.pad(gp, ((0, rpad), (0, 0)))
+    rows = mp.shape[0]
+    idxp = jnp.pad(idx, (0, rows - n_chunks))
+    grid = -(-rows // BLOCK_CHUNKS)
+    beta_arr = jnp.asarray([beta], jnp.float32)
+    m_new, vals = pl.pallas_call(
+        _ef_update_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # beta scalar, same block each step
+            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, chunk), m.dtype),
+            jax.ShapeDtypeStruct((rows,), m.dtype),
+        ],
+        interpret=interpret,
+    )(beta_arr, mp, gp, idxp)
+    return m_new.reshape(-1)[:n], vals[:n_chunks]

@@ -1,0 +1,38 @@
+"""jit'd public wrappers for the Pallas kernels with automatic CPU fallback.
+
+On TPU (the target) the kernels compile natively; this container is CPU-only so
+``interpret=True`` executes the kernel bodies in Python — bit-identical math,
+validated against repro.kernels.ref in the test suite.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import chunk_topk as _ct
+from repro.kernels import ef_update as _ef
+
+__all__ = ["chunk_argmax", "chunk_select", "chunk_gather", "ef_update", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def chunk_select(x, chunk: int):
+    """Per-chunk (indices, values) magnitude selection of a flat array."""
+    return _ct.chunk_argmax_pallas(x, chunk, interpret=not on_tpu())
+
+
+def chunk_argmax(x, chunk: int):
+    """Indices only (CompressorConfig.use_kernel entry point)."""
+    return _ct.chunk_argmax_pallas(x, chunk, interpret=not on_tpu())[0]
+
+
+def chunk_gather(x, idx, chunk: int):
+    return _ct.chunk_gather_pallas(x, idx, chunk, interpret=not on_tpu())
+
+
+def ef_update(m, g, idx, beta: float, chunk: int):
+    """Fused low-pass residue update: (m_new, vals)."""
+    return _ef.ef_update_pallas(m, g, idx, beta, chunk, interpret=not on_tpu())

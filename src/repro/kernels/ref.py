@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import chunked
+
+__all__ = ["chunk_argmax_ref", "chunk_gather_ref", "ef_update_ref"]
+
+
+def chunk_argmax_ref(x: jnp.ndarray, chunk: int):
+    """(indices, values) per chunk — mirrors chunk_topk._argmax_kernel."""
+    idx = chunked.chunk_argmax(x, chunk)
+    vals = chunked.chunk_gather(x, idx, chunk)
+    return idx, vals
+
+
+def chunk_gather_ref(x: jnp.ndarray, idx: jnp.ndarray, chunk: int):
+    return chunked.chunk_gather(x, idx, chunk)
+
+
+def ef_update_ref(m: jnp.ndarray, g: jnp.ndarray, idx: jnp.ndarray, beta: float, chunk: int):
+    """Unfused Eq. 5 reference: returns (m_new, vals)."""
+    n = m.shape[-1]
+    ef = m + g
+    vals = chunked.chunk_gather(ef, idx, chunk)
+    ghat_own = chunked.chunk_scatter(vals, idx, chunk, n)
+    m_new = m + beta * (g - ghat_own)
+    return m_new, vals

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS — importing this module never touches jax device state, so
+smoke tests / benchmarks see the real (single) CPU device while the dry-run
+entrypoint sets XLA_FLAGS for 512 host devices before any jax import.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small host-device mesh for CI-scale distributed tests."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+class HW:
+    """TPU v5e-like hardware constants (roofline denominators)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link (intra-pod)
+    DCN_BW = 25e9  # bytes/s per chip (cross-pod)
+    HBM_BYTES = 16 * 1024**3  # 16 GiB per chip

@@ -1,0 +1,76 @@
+"""Runnable serving driver (CPU-scale): prefill a batch of prompts on a SMOKE
+arch and decode greedily with the KV-cache / recurrent-state serve path.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --batch 4 \
+        --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data import SyntheticLM
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.smoke(args.arch)
+    model = build_model(cfg, compute_dtype="float32")
+    key = jax.random.PRNGKey(args.seed)
+    params, _ = model.init(key)
+
+    src = SyntheticLM(cfg.vocab, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    prompts = src.sample(rng, args.batch, args.prompt_len)[:, : args.prompt_len]
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+    if cfg.arch_type == "vlm":
+        batch["vision"] = jax.random.normal(
+            key, (args.batch, cfg.vision_tokens, cfg.d_model)
+        )
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model)
+        )
+
+    ctx = args.prompt_len + (cfg.vision_tokens if cfg.arch_type == "vlm" else 0)
+    total = ctx + args.gen
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, total))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, state = prefill(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t1 = time.time()
+    out_tokens = [np.asarray(tok)]
+    for i in range(args.gen - 1):
+        logits, state = decode(params, state, tok, jnp.int32(ctx + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t2 = time.time()
+
+    gen = np.stack(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"prefill: {t1 - t0:.3f}s (incl. compile)  decode: {(t2 - t1) / max(args.gen - 1, 1) * 1e3:.2f} ms/token")
+    print("generated token ids (first sequence):", gen[0][:16], "...")
+    assert np.isfinite(gen).all()
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Pure-JAX model zoo. ``build_model`` is the single construction entry point."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+
+_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+}
+
+
+def build_model(
+    cfg: ArchConfig,
+    *,
+    compute_dtype: str = "bfloat16",
+    param_dtype: str = "float32",
+    loss_chunk: int = 512,
+    decode_window=None,
+) -> Model:
+    return Model(
+        cfg=cfg,
+        compute_dtype=_DTYPES[compute_dtype],
+        param_dtype=_DTYPES[param_dtype],
+        loss_chunk=loss_chunk,
+        decode_window=decode_window,
+    )
+
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,98 @@
+"""RG-LRU recurrent blocks + local attention — RecurrentGemma / Griffin
+(arXiv:2402.19427). Hybrid pattern: 2 recurrent blocks per 1 local-attn block.
+
+Recurrent block (Griffin fig. 2):
+    x -> [linear -> gelu]                      (gate branch)
+    x -> [linear -> temporal conv1d(w=4) -> RG-LRU]   (recurrence branch)
+    out = linear(gate ⊙ recurrence)
+
+RG-LRU:  r_t = σ(W_a x_t),  i_t = σ(W_x x_t)
+         a_t = exp(c · softplus(Λ) · (-r_t))          # data-dependent decay
+         h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Training uses jax.lax.associative_scan over the sequence (the recurrence is a
+first-order linear scan — log-depth on TPU). Decode is the one-step update with
+a (B, D) hidden state plus a (B, conv_width-1, D) conv tail — O(1) in context
+length, which is what makes `long_500k` native for this arch.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Array = jnp.ndarray
+
+
+def init_rglru_block(cfg, store: common.ParamStore, stacked: int = 0):
+    D = cfg.d_model
+    W = cfg.conv_width
+    common.init_norm(cfg, store, "ln_rec", D, stacked=stacked)
+    store.dense("rec_in_gate", (D, D), ("embed", "heads"), stacked=stacked)
+    store.dense("rec_in_x", (D, D), ("embed", "heads"), stacked=stacked)
+    store.dense("rec_conv", (W, D), (None, "heads"), scale=W**-0.5, stacked=stacked)
+    store.zeros("rec_conv_b", (D,), ("heads",), stacked=stacked)
+    store.dense("rec_wa", (D, D), ("embed", "heads"), scale=0.02, stacked=stacked)
+    store.dense("rec_wx", (D, D), ("embed", "heads"), scale=0.02, stacked=stacked)
+    store.zeros("rec_lambda", (D,), ("heads",), stacked=stacked)
+    store.dense("rec_out", (D, D), ("heads", "embed"), stacked=stacked)
+
+
+def _conv1d_causal(x: Array, w: Array, b: Array, tail: Array) -> Tuple[Array, Array]:
+    """Depthwise causal conv. x: (B, S, D), w: (W, D), tail: (B, W-1, D) carry."""
+    W = w.shape[0]
+    xw = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, S+W-1, D)
+    out = sum(xw[:, i : i + x.shape[1], :] * w[i] for i in range(W)) + b
+    new_tail = xw[:, xw.shape[1] - (W - 1) :, :]
+    return out, new_tail
+
+
+def _rglru_scan(a: Array, bx: Array, h0: Array) -> Array:
+    """h_t = a_t * h_{t-1} + bx_t via associative scan. a/bx: (B, S, D) fp32."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    # fold h0 into the first step
+    bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+    a_acc, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    del a_acc
+    return h
+
+
+def rglru_block(
+    cfg, p, x: Array, state: Dict[str, Array], *, dtype
+) -> Tuple[Array, Dict[str, Array]]:
+    """state: {"h": (B, D) fp32, "conv": (B, W-1, D) fp32}."""
+    B, S, D = x.shape
+    xn = common.apply_norm(cfg, x, p, "ln_rec")
+    gate = jax.nn.gelu(xn @ p["rec_in_gate"].astype(dtype))
+    u = xn @ p["rec_in_x"].astype(dtype)
+    u, new_tail = _conv1d_causal(
+        u, p["rec_conv"].astype(dtype), p["rec_conv_b"].astype(dtype), state["conv"]
+    )
+    # RG-LRU in fp32 for numerical stability of the scan
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid((xn @ p["rec_wa"].astype(dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid((xn @ p["rec_wx"].astype(dtype)).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["rec_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    h = _rglru_scan(a, bx, state["h"])
+    out = (h.astype(dtype) * gate) @ p["rec_out"].astype(dtype)
+    new_state = {"h": h[:, -1, :], "conv": new_tail.astype(jnp.float32)}
+    return x + out, new_state
+
+
+def init_rglru_state(cfg, batch: int) -> Dict[str, Array]:
+    D, W = cfg.d_model, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, D), jnp.float32),
+    }

@@ -1,0 +1,157 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Time-mix (simplified but structurally faithful):
+  * token-shift with data-dependent interpolation (ddlerp) via low-rank adapters
+  * per-channel data-dependent decay  w_t = exp(-exp(wd_t))
+  * per-head state S ∈ R^{hd×hd}:   y_t = r_t · (S_{t-1} + diag(u)·k_t v_tᵀ)
+                                    S_t  = diag(w_t) S_{t-1} + k_t v_tᵀ
+  * output gate g (silu) + group-norm per head
+
+Channel-mix: r = σ(x_r W_r); out = r ⊙ (relu(x_k W_k)² W_v).
+
+Training runs the recurrence with lax.scan over the sequence (state carries are
+O(B·H·hd²), independent of seq_len — this is why `long_500k` is native here).
+Decode is the single-step state update. The scan body is checkpointed so the
+backward pass recomputes per-step tensors instead of storing S per step... note:
+scan stores carries regardless; per-step activations dominate and are
+rematerialized.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Array = jnp.ndarray
+
+LORA_R = 64  # low-rank adapter width for ddlerp / decay
+
+
+def init_rwkv_block(cfg, store: common.ParamStore, stacked: int = 0):
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    common.init_norm(cfg, store, "ln_tm", D, stacked=stacked)
+    common.init_norm(cfg, store, "ln_cm", D, stacked=stacked)
+    # time-mix projections
+    for nm in ("tm_wr", "tm_wk", "tm_wv", "tm_wg"):
+        store.dense(nm, (D, D), ("embed", "heads"), stacked=stacked)
+    store.dense("tm_wo", (D, D), ("heads", "embed"), stacked=stacked)
+    # ddlerp base mixers (5 interpolation targets: r, k, v, g, w)
+    store.zeros("tm_mu", (5, D), (None, "embed"), stacked=stacked)
+    store.dense("tm_lora_a", (5, D, LORA_R), (None, "embed", None), scale=0.01, stacked=stacked)
+    store.dense("tm_lora_b", (5, LORA_R, D), (None, None, "embed"), scale=0.01, stacked=stacked)
+    # data-dependent decay
+    store.zeros("tm_w0", (D,), ("embed",), stacked=stacked)
+    store.dense("tm_wd_a", (D, LORA_R), ("embed", None), scale=0.01, stacked=stacked)
+    store.dense("tm_wd_b", (LORA_R, D), (None, "embed"), scale=0.01, stacked=stacked)
+    store.zeros("tm_u", (H, hd), ("heads", None), stacked=stacked)  # bonus
+    store.ones("tm_gn", (D,), ("embed",), stacked=stacked)  # per-head groupnorm scale
+    # channel-mix
+    store.zeros("cm_mu", (2, D), (None, "embed"), stacked=stacked)
+    store.dense("cm_wk", (D, F), ("embed", "mlp"), stacked=stacked)
+    store.dense("cm_wv", (F, D), ("mlp", "embed"), stacked=stacked)
+    store.dense("cm_wr", (D, D), ("embed", "heads"), stacked=stacked)
+
+
+def _ddlerp(p, x, x_prev, dtype):
+    """Data-dependent token-shift interpolation -> 5 mixed inputs (r,k,v,g,w)."""
+    xx = x_prev - x  # (B, S, D)
+    mu = p["tm_mu"].astype(dtype)  # (5, D)
+    la = p["tm_lora_a"].astype(dtype)  # (5, D, R)
+    lb = p["tm_lora_b"].astype(dtype)  # (5, R, D)
+    base = x[:, :, None, :] + xx[:, :, None, :] * mu  # (B, S, 5, D)
+    adj = jnp.einsum("bsfd,fdr->bsfr", base, la)
+    adj = jnp.tanh(adj)
+    adj = jnp.einsum("bsfr,frd->bsfd", adj, lb)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (mu + adj)
+    return tuple(mixed[:, :, i, :] for i in range(5))
+
+
+def _shift(x: Array, x_last: Array) -> Array:
+    """Token shift: returns x_{t-1} sequence; x_last is the carry-in token."""
+    return jnp.concatenate([x_last[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def time_mix(
+    cfg, p, x: Array, state: Dict[str, Array], *, dtype
+) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, S, D); state: {"s": (B, H, hd, hd), "x_prev": (B, D)}."""
+    B, S, D = x.shape
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    xr, xk, xv, xg, xw = _ddlerp(p, x, _shift(x, state["x_prev"]), dtype)
+    r = (xr @ p["tm_wr"].astype(dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["tm_wk"].astype(dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["tm_wv"].astype(dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["tm_wg"].astype(dtype))
+    wd = p["tm_w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr,re->bse",
+        xw.astype(jnp.float32),
+        p["tm_wd_a"].astype(jnp.float32),
+        p["tm_wd_b"].astype(jnp.float32),
+    )
+    w = jnp.exp(-jnp.exp(wd)).reshape(B, S, H, hd)  # decay in (0, 1)
+    u = p["tm_u"].astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, hd, hd)
+        # y_t = r · (S + u ⊙ kv)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    rs = r.astype(jnp.float32).transpose(1, 0, 2, 3)
+    ks = k.astype(jnp.float32).transpose(1, 0, 2, 3)
+    vs = v.astype(jnp.float32).transpose(1, 0, 2, 3)
+    ws = w.transpose(1, 0, 2, 3)
+    s_final, ys = jax.lax.scan(jax.checkpoint(step), state["s"], (rs, ks, vs, ws))
+    y = ys.transpose(1, 0, 2, 3)  # (B, S, H, hd)
+    # per-head group norm
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 1e-6)
+    y = y.reshape(B, S, D) * p["tm_gn"].astype(jnp.float32)
+    out = (y.astype(dtype) * g) @ p["tm_wo"].astype(dtype)
+    new_state = {"s": s_final, "x_prev": x[:, -1, :].astype(jnp.float32)}
+    return out, new_state
+
+
+def channel_mix(cfg, p, x: Array, x_prev: Array, *, dtype) -> Tuple[Array, Array]:
+    mu = p["cm_mu"].astype(dtype)
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dtype)))
+    r = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dtype))
+    return r * (k @ p["cm_wv"].astype(dtype)), x[:, -1, :].astype(jnp.float32)
+
+
+def rwkv_block_train(cfg, p, x, state, *, dtype):
+    h, new_tm = time_mix(cfg, p, common.apply_norm(cfg, x, p, "ln_tm"), state["tm"], dtype=dtype)
+    x = x + h
+    xn = common.apply_norm(cfg, x, p, "ln_cm")
+    h, cm_prev = channel_mix(cfg, p, xn, state["cm_x_prev"], dtype=dtype)
+    x = x + h
+    return x, {"tm": new_tm, "cm_x_prev": cm_prev}
+
+
+def init_rwkv_state(cfg, batch: int) -> Dict[str, Array]:
+    D = cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = D // hd
+    return {
+        "tm": {
+            "s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((batch, D), jnp.float32),
+        },
+        "cm_x_prev": jnp.zeros((batch, D), jnp.float32),
+    }
+
+
+def rwkv_block_decode(cfg, p, x, state, *, dtype):
+    """Single-token step: x (B, 1, D). Same math as train with S=1."""
+    return rwkv_block_train(cfg, p, x, state, dtype=dtype)

@@ -1,0 +1,4 @@
+from repro.optim.optimizer import Optimizer, adam, make_optimizer, rmsprop, sgdm
+from repro.optim import schedule
+
+__all__ = ["Optimizer", "adam", "make_optimizer", "rmsprop", "sgdm", "schedule"]

@@ -1,0 +1,120 @@
+"""Optimizers (pure JAX, no optax): SGD-momentum, Adam, RMSProp.
+
+These are the three the paper trains with (SGD-momentum for vision/speech,
+Adam for the Transformer, RMSProp for MobileNetV2 — Appendix E). ScaleCom sits
+*upstream*: the optimizer consumes the already-reduced sparsified gradient ĝ^t,
+exactly as Algorithm 1 line 12 applies the standard update to the compressed
+average.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Pytree = Any
+
+__all__ = ["Optimizer", "sgdm", "adam", "rmsprop", "make_optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, Array], Tuple[Pytree, Pytree]]
+    # update(grads, opt_state, params, lr) -> (new_params, new_opt_state)
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g + weight_decay * p if weight_decay else g
+            m_new = momentum * m + g
+            step = g + momentum * m_new if nesterov else m_new
+            return p - lr * step, m_new
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.98, eps: float = 1e-9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g + weight_decay * p if weight_decay else g
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            return p - lr * step, m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        leaf = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+            {
+                "m": jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+                "v": jax.tree.map(lambda t: t[2], out, is_leaf=leaf),
+                "count": c,
+            },
+        )
+
+    return Optimizer(init, update)
+
+
+def rmsprop(decay: float = 0.9, momentum: float = 0.9, eps: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """RMSProp with momentum; the paper's MobileNetV2 recipe uses eps=1.0."""
+
+    def init(params):
+        return {
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "m": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params, lr):
+        def upd(g, v, m, p):
+            g = g + weight_decay * p if weight_decay else g
+            v_new = decay * v + (1 - decay) * g * g
+            step = g / jnp.sqrt(v_new + eps)
+            m_new = momentum * m + step
+            return p - lr * m_new, v_new, m_new
+
+        out = jax.tree.map(upd, grads, state["v"], state["m"], params)
+        leaf = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda t: t[0], out, is_leaf=leaf),
+            {
+                "v": jax.tree.map(lambda t: t[1], out, is_leaf=leaf),
+                "m": jax.tree.map(lambda t: t[2], out, is_leaf=leaf),
+            },
+        )
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, *, momentum=0.9, weight_decay=0.0, **kw) -> Optimizer:
+    if name == "sgdm":
+        return sgdm(momentum=momentum, weight_decay=weight_decay)
+    if name == "adam":
+        return adam(weight_decay=weight_decay, **kw)
+    if name == "rmsprop":
+        return rmsprop(momentum=momentum, weight_decay=weight_decay, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,88 @@
+"""Learning-rate schedules used by the paper's recipes (Appendix E):
+
+  * linear warmup -> constant / step decay   (vision: x0.1 at epoch marks)
+  * inverse-sqrt with warmup                 (Transformer / WMT14)
+  * exponential per-epoch decay              (MobileNetV2: 0.98/epoch)
+  * annealing + 1/sqrt(2) per-epoch decay    (speech SWB300)
+  * cosine                                   (modern default)
+
+All schedules are step -> lr callables built from python floats, jit-safe.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "constant",
+    "linear_warmup",
+    "step_decay",
+    "inverse_sqrt",
+    "exponential_decay",
+    "cosine",
+    "chain_warmup",
+]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(base: Schedule, warmup_steps: int, start_lr: float = 0.0) -> Schedule:
+    def f(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        warm = start_lr + frac * (base(jnp.asarray(warmup_steps)) - start_lr)
+        return jnp.where(step < warmup_steps, warm, base(step))
+
+    return f
+
+
+def step_decay(lr: float, boundaries: Sequence[int], factor: float = 0.1) -> Schedule:
+    bs = tuple(boundaries)
+
+    def f(step):
+        n = sum(jnp.where(step >= b, 1.0, 0.0) for b in bs)
+        return jnp.asarray(lr, jnp.float32) * factor**n
+
+    return f
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int) -> Schedule:
+    """Vaswani-style: lr = peak * min(step^-0.5, step * warmup^-1.5) * warmup^0.5."""
+
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return peak_lr * jnp.minimum(s**-0.5, s * warmup_steps**-1.5) * warmup_steps**0.5
+
+    return f
+
+
+def exponential_decay(lr: float, steps_per_epoch: int, rate: float = 0.98) -> Schedule:
+    def f(step):
+        epochs = step.astype(jnp.float32) / steps_per_epoch
+        return jnp.asarray(lr, jnp.float32) * rate**epochs
+
+    return f
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.0) -> Schedule:
+    def f(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def chain_warmup(lr: float, warmup_steps: int, total_steps: int, kind: str = "cosine") -> Schedule:
+    if kind == "cosine":
+        base = cosine(lr, total_steps)
+    elif kind == "constant":
+        base = constant(lr)
+    else:
+        raise ValueError(kind)
+    return linear_warmup(base, warmup_steps)

@@ -1,0 +1,13 @@
+from repro.training.train_step import TrainState, build_train_step, init_train_state
+from repro.training.loop import TrainLoop, run_training
+from repro.training.serve import build_serve_fns, decode_state_specs
+
+__all__ = [
+    "TrainState",
+    "build_train_step",
+    "init_train_state",
+    "TrainLoop",
+    "run_training",
+    "build_serve_fns",
+    "decode_state_specs",
+]

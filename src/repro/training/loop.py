@@ -1,0 +1,98 @@
+"""Training loop: warm-up phase (dense) -> compressed phase, metric logging,
+periodic checkpointing, and optional residue-similarity probes.
+
+The warm-up uses a *separately compiled* dense step (the paper trains 1-5 epochs
+uncompressed before enabling compression); ScaleCom residues are zero during
+warm-up so switching steps is state-compatible by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.scalecom import ScaleComConfig
+from repro.training.train_step import TrainState, build_train_step
+
+__all__ = ["TrainLoop", "run_training"]
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    model: Any
+    optimizer: Any
+    schedule: Callable
+    sc_cfg: ScaleComConfig
+    n_workers: int
+    worker_axis: Optional[str] = None
+    grad_clip: Optional[float] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    log_every: int = 10
+    compute_stats: bool = False
+
+    def __post_init__(self):
+        common = dict(
+            n_workers=self.n_workers,
+            worker_axis=self.worker_axis,
+            grad_clip=self.grad_clip,
+            compute_stats=self.compute_stats,
+        )
+        self._dense = jax.jit(
+            build_train_step(self.model, self.optimizer, self.schedule,
+                             self.sc_cfg, mode="dense", **common),
+            donate_argnums=(0,),
+        )
+        self._compressed = jax.jit(
+            build_train_step(self.model, self.optimizer, self.schedule,
+                             self.sc_cfg, mode="scalecom", **common),
+            donate_argnums=(0,),
+        )
+
+    def step(self, state: TrainState, batch, step_idx: int):
+        compressed = (
+            self.sc_cfg.compressor.name != "none"
+            and step_idx >= self.sc_cfg.warmup_steps
+        )
+        fn = self._compressed if compressed else self._dense
+        return fn(state, batch)
+
+
+def run_training(
+    loop: TrainLoop,
+    state: TrainState,
+    batches: Iterator[Dict[str, np.ndarray]],
+    num_steps: int,
+    *,
+    log: Optional[Callable[[str], None]] = print,
+) -> tuple[TrainState, List[Dict[str, float]]]:
+    history: List[Dict[str, float]] = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        if i >= num_steps:
+            break
+        state, metrics = loop.step(state, batch, i)
+        if (i % loop.log_every == 0) or i == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            if log is not None:
+                log(
+                    f"step {i:5d}  loss {m['loss']:.4f}  gnorm {m['grad_norm']:.3f}"
+                    f"  lr {m['lr']:.2e}"
+                )
+        if (
+            loop.checkpoint_dir
+            and loop.checkpoint_every
+            and i
+            and i % loop.checkpoint_every == 0
+        ):
+            from repro import checkpoint
+
+            checkpoint.save(loop.checkpoint_dir, i, state)
+    return state, history

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run alone uses 512 host
+# devices, in its own process). Keep x64 off to match production numerics.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

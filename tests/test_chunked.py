@@ -1,0 +1,83 @@
+"""Chunk-wise selection primitives: exactness + hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunked
+
+
+def _np_chunk_argmax(x, chunk):
+    n = x.size
+    pad = (-n) % chunk
+    xp = np.pad(x, (0, pad)).reshape(-1, chunk)
+    return np.argmax(np.abs(xp), axis=-1)
+
+
+@pytest.mark.parametrize("size,chunk", [(64, 8), (100, 16), (4096, 64), (17, 4), (5, 8)])
+def test_chunk_argmax_matches_numpy(size, chunk):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(size), (size,)))
+    got = np.asarray(chunked.chunk_argmax(jnp.asarray(x), chunk))
+    np.testing.assert_array_equal(got, _np_chunk_argmax(x, chunk))
+
+
+@pytest.mark.parametrize("size,chunk,m", [(256, 16, 4), (100, 8, 2)])
+def test_chunk_topm_contains_argmax(size, chunk, m):
+    x = jax.random.normal(jax.random.PRNGKey(0), (size,))
+    top1 = chunked.chunk_argmax(x, chunk)
+    topm = chunked.chunk_topm_indices(x, chunk, m)
+    assert np.all(np.any(np.asarray(topm) == np.asarray(top1)[:, None], axis=1))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    size=st.integers(1, 300),
+    chunk=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_scatter_roundtrip(size, chunk, seed):
+    """scatter(gather(x, idx), idx) keeps exactly the selected entries."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (size,))
+    idx = chunked.chunk_argmax(x, chunk)
+    vals = chunked.chunk_gather(x, idx, chunk)
+    dense = chunked.chunk_scatter(vals, idx, chunk, size)
+    # nonzeros of dense == selected positions, values match x there
+    xd = np.asarray(x)
+    dd = np.asarray(dense)
+    nz = dd != 0
+    np.testing.assert_allclose(dd[nz], xd[nz], rtol=1e-6)
+    # selected values are per-chunk maxima in magnitude
+    n_chunks = chunked.num_chunks(size, chunk)
+    assert vals.shape == (n_chunks,)
+    for c in range(n_chunks):
+        lo, hi = c * chunk, min((c + 1) * chunk, size)
+        assert abs(float(vals[c])) >= np.max(np.abs(xd[lo:hi])) - 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(size=st.integers(8, 200), chunk=st.sampled_from([4, 16]), seed=st.integers(0, 999))
+def test_scatter_is_linear(size, chunk, seed):
+    """chunk_scatter is linear in values — the property that makes CLT-k
+    commute with averaging (Eq. 1)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (size,))
+    idx = chunked.chunk_argmax(x, chunk)
+    n_chunks = chunked.num_chunks(size, chunk)
+    v1 = jax.random.normal(k2, (n_chunks,))
+    v2 = jax.random.normal(k1, (n_chunks,))
+    a = chunked.chunk_scatter(v1 + 2.0 * v2, idx, chunk, size)
+    b = chunked.chunk_scatter(v1, idx, chunk, size) + 2.0 * chunked.chunk_scatter(
+        v2, idx, chunk, size
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_padding_never_selected_into_output():
+    """Zero-padding lanes may win all-zero chunks but scatter back only zeros."""
+    x = jnp.zeros((10,))
+    idx = chunked.chunk_argmax(x, 8)
+    vals = chunked.chunk_gather(x, idx, 8)
+    dense = chunked.chunk_scatter(vals, idx, 8, 10)
+    assert np.all(np.asarray(dense) == 0)

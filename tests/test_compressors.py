@@ -1,0 +1,153 @@
+"""Compressor semantics: commutativity (Eq. 1), CLT-k definition (Eq. 3),
+contraction (Lemma 1), and the similarity metrics of Figs. 2-3."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunked, metrics
+from repro.core.compressors import CompressorConfig, compress
+from repro.core.filter import beta_band
+
+
+def _stacked(seed, n=4, size=512, corr=0.0):
+    """Worker-stacked gradients with optional common component (correlation)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    base = jax.random.normal(k1, (size,))
+    noise = jax.random.normal(k2, (n, size))
+    return corr * base[None] + (1 - corr) * noise
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), t=st.integers(0, 7))
+def test_clt_commutes_with_averaging(seed, t):
+    """sparse(mean(x)) == mean(sparse(x)) for a shared index set (Eq. 1)."""
+    ef = _stacked(seed)
+    cfg = CompressorConfig("clt_k", chunk=16)
+    vals, idx, dense = compress(ef, jnp.int32(t), cfg)
+    per_worker = jax.vmap(lambda v: chunked.chunk_scatter(v, idx, 16, ef.shape[1]))(vals)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(per_worker, axis=0)), np.asarray(dense), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_clt_leader_is_local_topk():
+    """CLT_i(x_i) == top-k(x_i): when the leader compresses itself it keeps its
+    own largest-magnitude entry per chunk (Remark 1)."""
+    ef = _stacked(3)
+    cfg = CompressorConfig("clt_k", chunk=16)
+    for t in range(ef.shape[0]):
+        vals, idx, _ = compress(ef, jnp.int32(t), cfg)
+        own = chunked.chunk_argmax(ef[t], 16)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(own))
+
+
+def test_cyclic_leader_rotates():
+    ef = _stacked(4)
+    cfg = CompressorConfig("clt_k", chunk=16)
+    _, idx_t0, _ = compress(ef, jnp.int32(0), cfg)
+    _, idx_t4, _ = compress(ef, jnp.int32(4), cfg)  # n=4 => same leader
+    _, idx_t1, _ = compress(ef, jnp.int32(1), cfg)
+    np.testing.assert_array_equal(np.asarray(idx_t0), np.asarray(idx_t4))
+    assert np.any(np.asarray(idx_t0) != np.asarray(idx_t1))
+
+
+def test_contraction_ordering():
+    """gamma(true top-k) <= gamma(CLT-k) <= 1; correlation tightens CLT-k."""
+    cfg = dict(chunk=16)
+    for corr, seed in [(0.0, 0), (0.9, 0)]:
+        ef = _stacked(seed, corr=corr)
+        y = jnp.mean(ef, axis=0)
+        _, _, d_true = compress(ef, jnp.int32(0), CompressorConfig("true_topk", **cfg))
+        _, _, d_clt = compress(ef, jnp.int32(0), CompressorConfig("clt_k", **cfg))
+        g_true = float(metrics.contraction_gamma(y, d_true))
+        g_clt = float(metrics.contraction_gamma(y, d_clt))
+        assert 0.0 <= g_true <= g_clt <= 1.0 + 1e-6, (corr, g_true, g_clt)
+    # high correlation should bring CLT-k close to true top-k
+    ef = _stacked(0, corr=0.98)
+    y = jnp.mean(ef, axis=0)
+    _, _, d_true = compress(ef, jnp.int32(0), CompressorConfig("true_topk", **cfg))
+    _, _, d_clt = compress(ef, jnp.int32(0), CompressorConfig("clt_k", **cfg))
+    assert float(metrics.contraction_gamma(y, d_clt)) <= float(
+        metrics.contraction_gamma(y, d_true)
+    ) + 0.1
+
+
+def test_lemma1_bound():
+    """E||y - comp(y)||^2 <= (d/k + (1-d/k) gamma0) ||y||^2 with d from the
+    Hamming distance between the index sets (Lemma 1, exact top-k form)."""
+    size, k = 512, 32
+    key = jax.random.PRNGKey(1)
+    y = jax.random.normal(key, (size,))
+    # compress y with a perturbed index set
+    other = y + 0.5 * jax.random.normal(jax.random.PRNGKey(2), (size,))
+    _, idx = jax.lax.top_k(jnp.abs(other), k)
+    comp = jnp.zeros((size,)).at[idx].set(y[idx])
+    # gamma0 of exact top-k on y
+    _, tidx = jax.lax.top_k(jnp.abs(y), k)
+    topk = jnp.zeros((size,)).at[tidx].set(y[tidx])
+    gamma0 = float(metrics.contraction_gamma(y, topk))
+    d_over_k = float(metrics.hamming_distance_topk(other, y, k))
+    gamma_bound = d_over_k + (1 - d_over_k) * gamma0
+    gamma_actual = float(metrics.contraction_gamma(y, comp))
+    # Lemma 1 is in expectation over index permutations; allow slack
+    assert gamma_actual <= gamma_bound + 0.15, (gamma_actual, gamma_bound)
+
+
+def test_local_topk_build_up():
+    """local top-k unions indices across workers: the reduced tensor has up to
+    n times as many nonzeros (gradient build-up, Fig. 1a)."""
+    ef = _stacked(7, n=8)
+    cfg = CompressorConfig("local_topk", chunk=16)
+    _, _, dense = compress(ef, jnp.int32(0), cfg)
+    cfg2 = CompressorConfig("clt_k", chunk=16)
+    _, _, dense_clt = compress(ef, jnp.int32(0), cfg2)
+    nz_local = int(jnp.sum(dense != 0))
+    nz_clt = int(jnp.sum(dense_clt != 0))
+    assert nz_local > 2 * nz_clt  # uncorrelated workers pick different indices
+
+
+def test_random_k_commutes():
+    ef = _stacked(9)
+    cfg = CompressorConfig("random_k", chunk=16)
+    vals, idx, dense = compress(ef, jnp.int32(5), cfg)
+    per = jax.vmap(lambda v: chunked.chunk_scatter(v, idx, 16, ef.shape[1]))(vals)
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(per, 0)), np.asarray(dense), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_none_is_identity_mean():
+    ef = _stacked(2)
+    _, _, dense = compress(ef, jnp.int32(0), CompressorConfig("none"))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(jnp.mean(ef, 0)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["clt_k", "true_topk", "random_k", "local_topk"])
+def test_exact_paths_run(name):
+    ef = _stacked(11)
+    vals, idx, dense = compress(ef, jnp.int32(1), CompressorConfig(name, chunk=16, exact=True))
+    assert np.isfinite(np.asarray(dense)).all()
+
+
+def test_beta_band_theorem1():
+    lo, hi = beta_band(0.5)
+    assert 0.0 < lo < hi < 1.0
+    # paper's beta=0.1..0.3 falls in the band for good contraction
+    lo2, hi2 = beta_band(0.1)
+    assert lo2 < 0.3 < hi2
+
+
+def test_metrics_sanity():
+    ef = _stacked(0, corr=0.95)
+    rep = metrics.residue_similarity_report(ef, k=32)
+    assert float(rep["pairwise_cosine_distance"]) < 0.3
+    assert 0.0 <= float(rep["hamming_d_over_k"]) <= 1.0
+    ef_bad = _stacked(0, corr=0.0)
+    rep_bad = metrics.residue_similarity_report(ef_bad, k=32)
+    assert float(rep_bad["pairwise_cosine_distance"]) > float(
+        rep["pairwise_cosine_distance"]
+    )

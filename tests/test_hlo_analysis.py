@@ -1,0 +1,89 @@
+"""Loop-aware HLO analyzer: trip-count multiplication, dot flops, collective
+classification (incl. pod-crossing detection from iota replica groups)."""
+
+import numpy as np
+
+from repro.analysis.hlo import analyze_module, collective_summary
+
+SIMPLE = """
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,128] get-tuple-element(%p), index=1
+  %d = f32[128,128] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128] all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,128]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[128,128])) -> pred[] {
+  %p2 = (s32[], f32[128,128]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[128,128]) tuple(%zero, %a)
+  %w = (s32[], f32[128,128]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[128,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_multiplication():
+    c = analyze_module(SIMPLE)
+    # 7 iterations x 2*128*128*128 flops
+    assert c.dot_flops == 7 * 2 * 128**3
+    s = collective_summary(c)
+    assert s["n_ops"] == 7
+    # all-reduce: 2 * 64KiB * 3/4 per iteration
+    assert s["bytes_all-reduce"] == 7 * 2 * (128 * 128 * 4) * 3 / 4
+
+
+def test_trip_count_fallback_from_condition():
+    txt = SIMPLE.replace(', backend_config={"known_trip_count":{"n":"7"}}', "")
+    c = analyze_module(txt)
+    assert c.dot_flops == 7 * 2 * 128**3
+
+
+POD = """
+HloModule test2
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %a = f32[64] parameter(0)
+  %ar1 = f32[64] all-reduce(%a), replica_groups=[256,2]<=[2,256]T(1,0), to_apply=%add
+  %ar2 = f32[64] all-reduce(%ar1), replica_groups=[2,256]<=[512], to_apply=%add
+  ROOT %cp = f32[64] copy(%ar2)
+}
+"""
+
+
+def test_pod_crossing_detection():
+    """Group [256,2]<=[2,256]T(1,0) pairs device i with i+256 (cross-pod);
+    [2,256]<=[512] groups 0..255 (intra-pod)."""
+    c = analyze_module(POD, pod_size=256)
+    kinds = {(op.crosses_pod, op.group_size) for op in c.collectives}
+    assert (True, 2) in kinds
+    assert (False, 256) in kinds
+    s = collective_summary(c)
+    assert s["dcn_bytes"] > 0 and s["ici_bytes"] > 0
+
+
+def test_dot_with_batch_dims():
+    txt = """
+HloModule t3
+
+ENTRY %main (a: f32[4,32,64], b: f32[4,64,16]) -> f32[4,32,16] {
+  %a = f32[4,32,64] parameter(0)
+  %b = f32[4,64,16] parameter(1)
+  ROOT %d = f32[4,32,16] dot(%a, %b), lhs_batch_dims={0}, rhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_contracting_dims={1}
+}
+"""
+    c = analyze_module(txt)
+    assert c.dot_flops == 2 * 4 * 32 * 16 * 64

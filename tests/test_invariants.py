@@ -1,0 +1,97 @@
+"""System invariants (hypothesis): conservation and structural properties of
+error-feedback compression that must hold for ANY input stream."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunked
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig, scalecom_reduce
+from repro.core.state import CODECS, init_state
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), steps=st.integers(2, 5))
+def test_ef_mass_conservation(seed, steps):
+    """With beta=1 (classic EF), per worker:  m_T == sum_t g_t - sum_t sent_t.
+    Nothing is ever lost — withheld gradient mass sits in the residue. This is
+    the invariant that makes top-k EF converge (Stich et al.)."""
+    n, size, chunk = 3, 256, 8
+    params = {"w": jnp.zeros((size,))}
+    cfg = ScaleComConfig(
+        compressor=CompressorConfig("clt_k", chunk=chunk), beta=1.0, min_size=1
+    )
+    state = init_state(params, n, min_size=1)
+    key = jax.random.PRNGKey(seed)
+    g_sum = np.zeros((n, size))
+    sent_sum = np.zeros((n, size))
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        g = jax.random.normal(sub, (n, size))
+        m_before = np.asarray(CODECS["fp32"].decode(state.residues["['w']"], (size,)))
+        ghat, state, _ = scalecom_reduce({"w": g}, state, cfg)
+        m_after = np.asarray(CODECS["fp32"].decode(state.residues["['w']"], (size,)))
+        # sent_t = (m_before + g) - m_after   (what left the residue+gradient)
+        sent_sum += m_before + np.asarray(g) - m_after
+        g_sum += np.asarray(g)
+    m_final = np.asarray(CODECS["fp32"].decode(state.residues["['w']"], (size,)))
+    np.testing.assert_allclose(m_final, g_sum - sent_sum, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_ghat_support_is_leader_selection(seed):
+    """ghat's nonzero pattern must be exactly the leader's per-chunk argmax
+    positions of ITS error-feedback gradient (CLT-k definition, Eq. 3)."""
+    n, size, chunk = 4, 128, 8
+    params = {"w": jnp.zeros((size,))}
+    cfg = ScaleComConfig(
+        compressor=CompressorConfig("clt_k", chunk=chunk), beta=0.5, min_size=1
+    )
+    state = init_state(params, n, min_size=1)
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, size))
+    ghat, state2, _ = scalecom_reduce({"w": g}, state, cfg)  # leader = 0
+    leader_idx = chunked.chunk_argmax(g[0], chunk)  # residue was 0
+    expected = chunked.chunk_scatter(
+        jnp.ones_like(leader_idx, jnp.float32), leader_idx, chunk, size
+    )
+    got_support = np.asarray(ghat["w"]) != 0
+    # every nonzero of ghat sits at a leader-selected position (values CAN be
+    # zero by cancellation, so support ⊆ selection)
+    assert np.all(~got_support | (np.asarray(expected) > 0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), beta=st.sampled_from([0.1, 0.5, 1.0]))
+def test_rowwise_flat_same_update_when_aligned(seed, beta):
+    """layout invariance on aligned shapes: identical ghat AND residues."""
+    n, R, C, chunk = 3, 4, 32, 8
+    params = {"w": jnp.zeros((R, C))}
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, R, C))
+    outs = {}
+    for layout in ("flat", "rowwise"):
+        cfg = ScaleComConfig(
+            compressor=CompressorConfig("clt_k", chunk=chunk), beta=beta,
+            min_size=1, layout=layout,
+        )
+        state = init_state(params, n, min_size=1, layout=layout)
+        ghat, state2, _ = scalecom_reduce({"w": g}, state, cfg)
+        m = np.asarray(state2.residues["['w']"]["q"]).reshape(n, R * C)
+        outs[layout] = (np.asarray(ghat["w"]), m)
+    np.testing.assert_allclose(outs["flat"][0], outs["rowwise"][0], rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(outs["flat"][1], outs["rowwise"][1], rtol=1e-5, atol=1e-7)
+
+
+def test_compression_is_idempotent_on_its_own_output():
+    """Compressing an already-CLT-k-sparse tensor with the same leader keeps
+    it unchanged (the selected entries are by construction per-chunk maxima)."""
+    size, chunk = 256, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, size))
+    from repro.core.compressors import compress
+
+    cfg = CompressorConfig("clt_k", chunk=chunk)
+    _, _, dense1 = compress(x, jnp.int32(0), cfg)
+    _, _, dense2 = compress(dense1[None], jnp.int32(0), cfg)
+    np.testing.assert_allclose(np.asarray(dense1), np.asarray(dense2), rtol=1e-6)

@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis.
+
+Kernels run in interpret mode on CPU (the TPU is the target, not the runtime);
+the kernel *math* is identical either way.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+SIZES = [1024, 4096, 5000, 65536 + 17]
+CHUNKS = [16, 64, 128]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("size", SIZES)
+@pytest.mark.parametrize("chunk", CHUNKS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chunk_select_matches_ref(size, chunk, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(size + chunk), (size,)).astype(dtype)
+    i1, v1 = ops.chunk_select(x, chunk)
+    i2, v2 = ref.chunk_argmax_ref(x, chunk)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(
+        np.asarray(v1, np.float32), np.asarray(v2, np.float32), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("size", [4096, 5000])
+@pytest.mark.parametrize("chunk", [64])
+def test_chunk_gather_matches_ref(size, chunk):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (size,))
+    n_chunks = -(-size // chunk)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (n_chunks,), 0, chunk)
+    v1 = ops.chunk_gather(x, idx, chunk)
+    v2 = ref.chunk_gather_ref(x, idx, chunk)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("size", SIZES)
+@pytest.mark.parametrize("chunk", [64])
+@pytest.mark.parametrize("beta", [0.1, 1.0])
+def test_ef_update_matches_ref(size, chunk, beta):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(size))
+    m = jax.random.normal(k1, (size,))
+    g = jax.random.normal(k2, (size,))
+    idx, _ = ops.chunk_select(m + g, chunk)
+    m1, v1 = ops.ef_update(m, g, idx, beta, chunk)
+    m2, v2 = ref.ef_update_ref(m, g, idx, beta, chunk)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    size=st.integers(16, 3000),
+    chunk=st.sampled_from([16, 64]),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_property_sweep(size, chunk, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (size,))
+    i1, v1 = ops.chunk_select(x, chunk)
+    i2, v2 = ref.chunk_argmax_ref(x, chunk)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_kernel_grid_covers_multiple_blocks():
+    """Sizes spanning several BLOCK_CHUNKS grid steps (the tiling path)."""
+    from repro.kernels.chunk_topk import BLOCK_CHUNKS
+
+    chunk = 16
+    size = chunk * BLOCK_CHUNKS * 3 + 5
+    x = jax.random.normal(jax.random.PRNGKey(7), (size,))
+    i1, v1 = ops.chunk_select(x, chunk)
+    i2, v2 = ref.chunk_argmax_ref(x, chunk)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)

@@ -1,0 +1,79 @@
+"""Optimizers + schedules."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adam, make_optimizer, rmsprop, schedule, sgdm
+
+
+def _minimize(opt, lr=0.1, steps=200):
+    """Quadratic bowl: f(x) = ||x - 3||^2."""
+    params = {"x": jnp.asarray([10.0, -4.0])}
+    target = jnp.asarray([3.0, 3.0])
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda p: jnp.sum((p["x"] - target) ** 2))(p)
+        return opt.update(g, s, p, jnp.asarray(lr))
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(jnp.max(jnp.abs(params["x"] - target)))
+
+
+@pytest.mark.parametrize("name,lr", [("sgdm", 0.05), ("adam", 0.2), ("rmsprop", 0.05)])
+def test_optimizers_converge(name, lr):
+    assert _minimize(make_optimizer(name), lr=lr) < 1e-2
+
+
+def test_momentum_accelerates():
+    """SGD-momentum makes more progress than plain SGD in few steps."""
+    plain = _minimize(sgdm(momentum=0.0), lr=0.02, steps=30)
+    mom = _minimize(sgdm(momentum=0.9), lr=0.02, steps=30)
+    assert mom < plain
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(b1=0.9, b2=0.999)
+    params = {"x": jnp.asarray([1.0])}
+    s = opt.init(params)
+    g = {"x": jnp.asarray([0.5])}
+    p2, s2 = opt.update(g, s, params, jnp.asarray(0.1))
+    # first step with bias correction ≈ lr * sign(g)
+    assert abs(float((params["x"] - p2["x"])[0]) - 0.1) < 1e-3
+
+
+def test_weight_decay_shrinks():
+    opt = sgdm(momentum=0.0, weight_decay=0.1)
+    params = {"x": jnp.asarray([1.0])}
+    s = opt.init(params)
+    g = {"x": jnp.asarray([0.0])}
+    p2, _ = opt.update(g, s, params, jnp.asarray(1.0))
+    assert float(p2["x"][0]) == pytest.approx(0.9)
+
+
+def test_schedules():
+    s = schedule.linear_warmup(schedule.constant(1.0), 10)
+    assert float(s(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(s(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(s(jnp.asarray(20))) == pytest.approx(1.0)
+
+    s = schedule.step_decay(1.0, [10, 20], 0.1)
+    assert float(s(jnp.asarray(5))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(15))) == pytest.approx(0.1)
+    assert float(s(jnp.asarray(25))) == pytest.approx(0.01)
+
+    s = schedule.inverse_sqrt(1.0, warmup_steps=100)
+    peak = float(s(jnp.asarray(100)))
+    assert float(s(jnp.asarray(50))) < peak
+    assert float(s(jnp.asarray(400))) == pytest.approx(peak / 2, rel=1e-3)
+
+    s = schedule.exponential_decay(1.0, steps_per_epoch=10, rate=0.5)
+    assert float(s(jnp.asarray(10))) == pytest.approx(0.5)
+
+    s = schedule.cosine(1.0, 100)
+    assert float(s(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)

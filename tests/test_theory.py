@@ -1,0 +1,66 @@
+"""Theory-connected empirical checks (Theorem 1 / Lemma 2 behaviour)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.compressors import CompressorConfig, compress
+from repro.core.filter import beta_band
+from repro.core.scalecom import ScaleComConfig
+from repro.core import metrics
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import TrainLoop, init_train_state, run_training
+
+
+def _train(beta, steps=50, lr=0.3, workers=8):
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=64),
+                        beta=beta, min_size=512, warmup_steps=5)
+    opt = make_optimizer("sgdm")
+    loop = TrainLoop(model=model, optimizer=opt, schedule=schedule.constant(lr),
+                     sc_cfg=sc, n_workers=workers, log_every=steps)
+    state, _ = init_train_state(model, opt, sc, jax.random.PRNGKey(0),
+                                n_workers=workers)
+    batches = make_batches(cfg.vocab, workers, 2, 64, seed=0)
+    _, hist = run_training(loop, state, batches, steps, log=None)
+    return hist[-1]["loss"]
+
+
+def test_beta_inside_band_beats_tiny_beta():
+    """Theorem 1's admissible band excludes beta -> 0 (residues never drain).
+    At an aggressive LR, beta=0.1 (inside the band for moderate gamma) should
+    beat beta=0.005 (far below the band's lower edge)."""
+    lo, hi = beta_band(0.5)
+    assert lo > 0.02  # the band genuinely excludes tiny betas
+    in_band = _train(beta=0.1)
+    below = _train(beta=0.005)
+    assert in_band <= below + 0.05, (in_band, below)
+
+
+def test_lemma2_contraction_improves_with_workers():
+    """Lemma 2 / Remark 5: with positively-correlated workers, the averaged
+    EF gradient contracts better (smaller gamma) as n grows."""
+    size, chunk = 4096, 64
+    key = jax.random.PRNGKey(0)
+    base = jax.random.normal(key, (size,))
+    gammas = {}
+    for n in (2, 16):
+        noise = jax.random.normal(jax.random.fold_in(key, n), (n, size))
+        ef = 0.6 * base[None] + 0.4 * noise
+        _, _, dense = compress(ef, jnp.int32(0), CompressorConfig("clt_k", chunk=chunk))
+        y = jnp.mean(ef, axis=0)
+        gammas[n] = float(metrics.contraction_gamma(y, dense))
+    assert gammas[16] <= gammas[2] + 0.02, gammas
+
+
+def test_linear_speedup_direction():
+    """Theorem 1's linear-speedup: more workers (bigger effective batch) give
+    a no-worse loss after the same number of steps at the same LR."""
+    l8 = _train(beta=0.1, workers=8, lr=0.05)
+    l2 = _train(beta=0.1, workers=2, lr=0.05)
+    assert l8 <= l2 + 0.1, (l8, l2)

@@ -1,0 +1,136 @@
+"""Training integration: ScaleCom training converges like dense (the paper's
+headline claim at proxy scale), warm-up switching, low-pass ablation, and
+checkpoint round-trip mid-run."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import registry
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import TrainLoop, init_train_state, run_training
+
+N_WORKERS = 4
+
+
+def _run(compressor="clt_k", beta=0.1, steps=60, chunk=16, seed=0, lr=0.05,
+         warmup=5, arch="paper-transformer-base", residue_dtype="fp32"):
+    cfg = registry.smoke(arch)
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc_cfg = ScaleComConfig(
+        compressor=CompressorConfig(compressor, chunk=chunk),
+        beta=beta, min_size=512, residue_dtype=residue_dtype, warmup_steps=warmup,
+    )
+    opt = make_optimizer("sgdm")
+    sched = schedule.constant(lr)
+    state, _ = init_train_state(
+        model, opt, sc_cfg, jax.random.PRNGKey(seed), n_workers=N_WORKERS
+    )
+    loop = TrainLoop(model=model, optimizer=opt, schedule=sched, sc_cfg=sc_cfg,
+                     n_workers=N_WORKERS, log_every=steps - 1)
+    batches = make_batches(cfg.vocab, N_WORKERS, 4, 64, seed=seed)
+    state, history = run_training(loop, state, batches, steps, log=None)
+    return state, history
+
+
+def test_scalecom_converges_like_dense():
+    """Table 2 proxy: compressed training reaches ~the dense loss.
+    beta=1 (classic EF) per the paper's standard-batch setting."""
+    _, h_dense = _run(compressor="none", steps=60)
+    _, h_clt = _run(compressor="clt_k", steps=60, beta=1.0)
+    d0, d1 = h_dense[0]["loss"], h_dense[-1]["loss"]
+    c1 = h_clt[-1]["loss"]
+    assert d1 < d0 - 0.3  # dense actually learns
+    assert c1 < d0 - 0.3  # compressed learns too
+    assert abs(c1 - d1) < 0.35, (c1, d1)  # and lands close to dense
+
+
+def test_scalecom_beats_random_k():
+    """CLT-k's contraction advantage is visible in training loss."""
+    _, h_clt = _run(compressor="clt_k", steps=60)
+    _, h_rand = _run(compressor="random_k", steps=60)
+    assert h_clt[-1]["loss"] <= h_rand[-1]["loss"] + 0.05
+
+
+def test_warmup_switch_preserves_state():
+    """Dense warm-up then compression: loss stays finite across the switch and
+    residues remain zero during warm-up."""
+    state, hist = _run(steps=12, warmup=8)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_fp8_residue_trains():
+    _, h = _run(steps=40, residue_dtype="fp8")
+    assert h[-1]["loss"] < h[0]["loss"] - 0.2
+
+
+def test_moe_arch_trains_with_scalecom():
+    _, h = _run(steps=30, arch="phi3.5-moe-42b-a6.6b")
+    assert h[-1]["loss"] < h[0]["loss"] - 0.1
+
+
+def test_ssm_arch_trains_with_scalecom():
+    _, h = _run(steps=30, arch="rwkv6-3b", lr=0.02)
+    assert h[-1]["loss"] < h[0]["loss"] - 0.05
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state, _ = _run(steps=8)
+    d = str(tmp_path / "ckpt")
+    checkpoint.save(d, 8, state)
+    like = jax.tree.map(np.asarray, state)
+    restored = checkpoint.restore(d, like)
+    for a, b in zip(jax.tree.leaves(like), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_clip_bounds_update():
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc_cfg = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=16), min_size=512)
+    opt = make_optimizer("sgdm")
+    from repro.training.train_step import build_train_step
+
+    step = build_train_step(model, opt, schedule.constant(0.1), sc_cfg,
+                            n_workers=N_WORKERS, grad_clip=0.001)
+    state, _ = init_train_state(model, opt, sc_cfg, jax.random.PRNGKey(0),
+                                n_workers=N_WORKERS)
+    batch = next(make_batches(cfg.vocab, N_WORKERS, 2, 32))
+    new_state, metrics = jax.jit(step)(state, batch)
+    delta = jnp.sqrt(sum(
+        jnp.sum((a - b) ** 2)
+        for a, b in zip(jax.tree.leaves(new_state.params), jax.tree.leaves(state.params))
+    ))
+    assert float(delta) < 0.01
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """M-microbatch fp32 accumulation == single-shot gradients (memory lever
+    for the §Perf memory term, zero math drift)."""
+    cfg = registry.smoke("starcoder2-3b")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc_cfg = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=16),
+                            beta=0.1, min_size=512)
+    opt = make_optimizer("sgdm")
+    from repro.optim import schedule as sched
+    from repro.training.train_step import build_train_step
+
+    state, _ = init_train_state(model, opt, sc_cfg, jax.random.PRNGKey(0),
+                                n_workers=N_WORKERS)
+    batch = jax.tree.map(jnp.asarray,
+                         next(make_batches(cfg.vocab, N_WORKERS, 4, 32, seed=1)))
+    s1, m1 = jax.jit(build_train_step(model, opt, sched.constant(0.05), sc_cfg,
+                                      n_workers=N_WORKERS))(state, batch)
+    s2, m2 = jax.jit(build_train_step(model, opt, sched.constant(0.05), sc_cfg,
+                                      n_workers=N_WORKERS, microbatches=2))(state, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
