@@ -1,6 +1,8 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs,
+plus the residue-codec roundtrip diagnostic (core.state.codec_roundtrip_error).
 
     PYTHONPATH=src python -m repro.analysis.report [--dir experiments/dryrun]
+    PYTHONPATH=src python -m repro.analysis.report --codecs   # codec table only
 """
 
 from __future__ import annotations
@@ -98,10 +100,36 @@ def comm_comparison(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
+def codec_table(steps: int = 5) -> str:
+    """Residue-codec encode∘decode health: per-step roundtrip error must stay
+    a contraction (< 1) and the accumulated drift bounded — the precondition
+    ScaleCom's Theorem 1 places on the quantized EF memory."""
+    from repro.core.state import CODECS, codec_roundtrip_error
+
+    out = [
+        "| codec | worst step err | last step err | drift vs fp32 |",
+        "|---|---:|---:|---:|",
+    ]
+    for name in CODECS:
+        r = codec_roundtrip_error(name, steps=steps)
+        out.append(
+            f"| {name} | {r['worst_step']:.2e} | {r['last_step']:.2e} | "
+            f"{r['drift']:.2e} |"
+        )
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--codecs", action="store_true",
+                    help="print only the residue-codec roundtrip table")
+    ap.add_argument("--codec-steps", type=int, default=5)
     args = ap.parse_args()
+    if args.codecs:
+        print("## Residue codec roundtrip\n")
+        print(codec_table(args.codec_steps))
+        return
     rows = load(args.dir)
     print(f"## Dry-run compile table ({len(rows)} runs)\n")
     print(compile_table(rows))
@@ -110,6 +138,8 @@ def main():
         print(roofline_table(rows, mesh, "scalecom"))
     print("\n## ScaleCom vs dense gradient traffic (train_4k)\n")
     print(comm_comparison(rows))
+    print("\n## Residue codec roundtrip\n")
+    print(codec_table())
 
 
 if __name__ == "__main__":

@@ -22,6 +22,18 @@ __all__ = ["save", "restore", "latest_step"]
 _MANIFEST = "manifest.json"
 
 
+def _raw_view_dtypes():
+    """ml_dtypes extension dtypes npz can't store natively; tolerant of builds
+    where float8 is absent (the compat layer's emulated-e4m3 path)."""
+    out = []
+    for name in ("bfloat16", "float8_e4m3fn"):
+        try:
+            out.append(np.dtype(name))
+        except TypeError:
+            pass
+    return tuple(out)
+
+
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
@@ -34,7 +46,7 @@ def save(directory: str, step: int, tree: Pytree) -> str:
     dtypes = {}
     for k, v in flat.items():
         dtypes[k] = str(v.dtype)
-        if v.dtype in (np.dtype("bfloat16"), np.dtype("float8_e4m3fn")):
+        if v.dtype in _raw_view_dtypes():
             payload[k] = v.view(np.uint8 if v.dtype.itemsize == 1 else np.uint16)
         else:
             payload[k] = v
@@ -64,7 +76,15 @@ def restore(directory: str, like: Pytree, step: int | None = None) -> Pytree:
     for path_t, leaf in flat_like[0]:
         k = jax.tree_util.keystr(path_t)
         v = data[k]
-        want = np.dtype(dtypes[k])
+        try:
+            want = np.dtype(dtypes[k])
+        except TypeError as e:
+            raise ValueError(
+                f"checkpoint leaf {k} was saved as {dtypes[k]!r}, which this "
+                "build's ml_dtypes cannot represent (e.g. float8 residues "
+                "restored on a jax without float8 support) — restore on a "
+                "float8-capable build or re-encode the checkpoint"
+            ) from e
         if str(v.dtype) != dtypes[k]:
             v = v.view(want)
         assert v.shape == leaf.shape, f"{k}: {v.shape} != {leaf.shape}"

@@ -1,0 +1,232 @@
+"""JAX version-portability layer for the distributed path.
+
+Every version-gated JAX symbol the repo relies on is probed and wrapped HERE,
+and nowhere else (enforced by tests/test_compat.py): the same reduce path has
+to run unmodified on whatever JAX the host ships, 0.4.x through 0.7.x, on
+CPU/GPU/TPU. The moving targets:
+
+  * ``jax.make_mesh(axis_types=...)`` / ``jax.sharding.AxisType`` — AxisType
+    only exists on 0.6+; ``jax.make_mesh`` itself only on 0.4.34+. Older still
+    falls back to ``Mesh(mesh_utils.create_device_mesh(...))``.
+  * ``jax.set_mesh`` (0.6+) vs ``jax.sharding.use_mesh`` (0.5.x) vs the legacy
+    ``with mesh:`` context (0.4.x).
+  * ``jax.shard_map`` (top-level on 0.6+) vs
+    ``jax.experimental.shard_map.shard_map``.
+  * ``jax.tree_util.tree_map_with_path`` / ``jax.lax.psum_scatter`` — present
+    on every version we target, but probed with a manual fallback so a future
+    relocation doesn't break the reduce path.
+  * ``jnp.float8_e4m3fn`` — availability probe plus an emulated e4m3 rounding
+    for builds without ml_dtypes float8 (storage degrades to bfloat16 there;
+    codec byte accounting follows the real itemsize).
+
+All probes run at CALL time, not import time, so tests can monkeypatch either
+branch and deployments that hot-swap jax (notebook upgrades) stay correct.
+
+Stable sharding symbols (Mesh / NamedSharding / PartitionSpec) are re-exported
+so the rest of the repo has a single canonical import point for sharding API.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+P = PartitionSpec
+
+__all__ = [
+    "JAX_VERSION",
+    "Mesh",
+    "NamedSharding",
+    "PartitionSpec",
+    "P",
+    "has_axis_type",
+    "make_mesh",
+    "set_mesh",
+    "shard_map",
+    "tree_map_with_path",
+    "axis_size",
+    "psum_scatter",
+    "has_float8",
+    "float8_e4m3_dtype",
+    "float8_itemsize",
+    "cast_to_e4m3",
+    "describe",
+]
+
+JAX_VERSION: Tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit()
+)
+
+_E4M3_MAX = 448.0  # e4m3fn finite max (no inf encoding; overflow -> nan)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction / activation
+# ---------------------------------------------------------------------------
+
+
+def has_axis_type() -> bool:
+    """True when this jax has ``jax.sharding.AxisType`` (0.6+ explicit-mesh API)."""
+    return hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+) -> Mesh:
+    """Version-portable ``jax.make_mesh``.
+
+    Newest first: make_mesh with explicit Auto axis_types (0.6+), make_mesh
+    without (0.4.34–0.5.x), and Mesh over mesh_utils.create_device_mesh for
+    anything older. All branches produce a fully Auto (GSPMD-inferred) mesh —
+    the repo's reduce path never relies on Explicit-mode sharding-in-types.
+    """
+    shape = tuple(shape)
+    axes = tuple(axes)
+    if hasattr(jax, "make_mesh"):
+        if has_axis_type():
+            try:
+                return jax.make_mesh(
+                    shape,
+                    axes,
+                    axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+                    devices=devices,
+                )
+            except TypeError:
+                pass  # make_mesh present but predates the axis_types kwarg
+        try:
+            return jax.make_mesh(shape, axes, devices=devices)
+        except TypeError:
+            return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils
+
+    devs = mesh_utils.create_device_mesh(shape, devices=devices)
+    return Mesh(devs, axes)
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` for jit/sharding resolution.
+
+    jax.set_mesh (0.6+) > jax.sharding.use_mesh (0.5.x) > the legacy
+    ``with mesh:`` context (0.4.x). All uses in this repo pass NamedSharding
+    (which carries its own mesh), so the activation is belt-and-braces on old
+    versions rather than load-bearing.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return _legacy_mesh_context(mesh)
+
+
+@contextlib.contextmanager
+def _legacy_mesh_context(mesh: Mesh):
+    with mesh:
+        yield mesh
+
+
+# ---------------------------------------------------------------------------
+# collectives / tree utils
+# ---------------------------------------------------------------------------
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+    """``jax.shard_map`` (0.6+) or ``jax.experimental.shard_map.shard_map``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def tree_map_with_path(f, tree, *rest, is_leaf=None):
+    """``jax.tree_util.tree_map_with_path`` with a flatten-based fallback."""
+    tu = jax.tree_util
+    if hasattr(tu, "tree_map_with_path"):
+        return tu.tree_map_with_path(f, tree, *rest, is_leaf=is_leaf)
+    flat, treedef = tu.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    rests = [treedef.flatten_up_to(r) for r in rest]
+    out = [
+        f(path, leaf, *(r[i] for r in rests)) for i, (path, leaf) in enumerate(flat)
+    ]
+    return treedef.unflatten(out)
+
+
+def axis_size(axis_name: str):
+    """``jax.lax.axis_size`` (0.6+); statically-folded psum(1) fallback on 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def psum_scatter(x, axis_name: str, *, scatter_dimension: int = 0, tiled: bool = False):
+    """``jax.lax.psum_scatter`` with a psum+slice fallback (inside shard_map)."""
+    if hasattr(jax.lax, "psum_scatter"):
+        return jax.lax.psum_scatter(
+            x, axis_name, scatter_dimension=scatter_dimension, tiled=tiled
+        )
+    full = jax.lax.psum(x, axis_name)
+    n = axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    shard = x.shape[scatter_dimension] // n
+    out = jax.lax.dynamic_slice_in_dim(full, idx * shard, shard, scatter_dimension)
+    if not tiled and shard == 1:
+        out = jnp.squeeze(out, axis=scatter_dimension)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# float8 guards
+# ---------------------------------------------------------------------------
+
+
+def has_float8() -> bool:
+    """True when this jax ships ``jnp.float8_e4m3fn`` (ml_dtypes float8)."""
+    return hasattr(jnp, "float8_e4m3fn")
+
+
+def float8_e4m3_dtype():
+    """The e4m3 storage dtype: ``jnp.float8_e4m3fn``, or ``jnp.bfloat16`` when
+    float8 is unavailable (values are still rounded onto the e4m3 grid by
+    ``cast_to_e4m3``, so codec numerics match; only the storage width grows)."""
+    return jnp.float8_e4m3fn if has_float8() else jnp.bfloat16
+
+
+def float8_itemsize() -> int:
+    """Bytes per element of the active e4m3 storage (1, or 2 when emulated)."""
+    return 1 if has_float8() else 2
+
+
+def cast_to_e4m3(x):
+    """Round ``x`` onto the e4m3 grid, in whatever storage dtype is active.
+
+    Native path is a plain astype. The emulated path keeps 4 significand bits
+    of fp32 (1 implicit + 3 explicit, e4m3's precision) via round-to-nearest-
+    even bit masking (ties-to-even matches ml_dtypes) and clamps to ±448;
+    e4m3 subnormals are approximated by the same masking (cold path — only
+    builds without ml_dtypes float8 hit it).
+    """
+    if has_float8():
+        return x.astype(jnp.float8_e4m3fn)
+    f = jnp.clip(x.astype(jnp.float32), -_E4M3_MAX, _E4M3_MAX)
+    bits = jax.lax.bitcast_convert_type(f, jnp.uint32)
+    lsb = (bits >> 20) & jnp.uint32(1)
+    rounded = (bits + jnp.uint32((1 << 19) - 1) + lsb) & jnp.uint32(0xFFF00000)
+    out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    out = jnp.where(jnp.abs(out) < 2.0**-9, 0.0, out)  # below e4m3 min subnormal
+    return out.astype(jnp.bfloat16)
+
+
+def describe() -> str:
+    """One-line runtime feature summary for launcher logs."""
+    return (
+        f"jax {jax.__version__} | AxisType={has_axis_type()} "
+        f"set_mesh={hasattr(jax, 'set_mesh')} shard_map={hasattr(jax, 'shard_map')} "
+        f"float8={has_float8()}"
+    )

@@ -49,7 +49,7 @@ from repro.core import chunked
 from repro.core.compressors import CompressorConfig, compress
 from repro.core.filter import lowpass_update
 from repro.core.rates import resolve_compressor
-from repro.core.state import CODECS, ScaleComState, storage_shape
+from repro.core.state import CODECS, ScaleComState, codec_key, storage_shape
 
 Array = jnp.ndarray
 Pytree = Any
@@ -65,7 +65,8 @@ class ScaleComConfig:
     beta:           low-pass filter discounting factor (1.0 = classic error
                     feedback; paper uses 0.1 for large-batch runs)
     min_size:       tensors smaller than this are reduced densely
-    residue_dtype:  fp32 | bf16 | fp8 (beyond-paper)
+    residue_dtype:  fp32 | bf16 | fp8 | fp8_ec (beyond-paper; lossy codecs
+                    use stochastic rounding keyed from the step counter)
     layout:         flat (paper-faithful) | rowwise (layout-preserving)
     groups:         ScaleCom worker granularity; None => every data rank is a
                     worker. G < n enables hierarchical mode.
@@ -126,7 +127,7 @@ def _rowwise_indices(efp: Array, t: Array, cfg: CompressorConfig) -> Array:
     raise NotImplementedError(f"{cfg.name} has no rowwise path")
 
 
-def _reduce_rowwise(gw, enc, codec, shape, cfg, t):
+def _reduce_rowwise(gw, enc, codec, shape, cfg, t, enc_key):
     """One tensor through Algorithm 1 in the layout-preserving form.
 
     The residue/work arrays keep the parameter's full shape — no reshape
@@ -156,7 +157,7 @@ def _reduce_rowwise(gw, enc, codec, shape, cfg, t):
         k = int(np.prod(vmean.shape))
 
     new_m = lowpass_update(m, g3, own, cfg.beta)
-    new_enc = codec.encode(new_m, st_shape)
+    new_enc = codec.encode(new_m, st_shape, key=enc_key)
     return ghat.reshape(shape), new_enc, k
 
 
@@ -213,10 +214,12 @@ def scalecom_reduce(
 
         gw = _group_fold(g.astype(jnp.float32), G)
         enc = state.residues[path]
+        enc_key = codec_key(path, t)  # stochastic-rounding dither for lossy codecs
 
         if cfg.layout == "rowwise":
             ghat, new_enc, k = _reduce_rowwise(
-                gw, enc, codec, shape, dataclasses.replace(cfg, compressor=comp), t
+                gw, enc, codec, shape, dataclasses.replace(cfg, compressor=comp), t,
+                enc_key,
             )
             new_residues[path] = new_enc
             ghat_leaves.append(ghat.astype(g.dtype))
@@ -245,7 +248,7 @@ def scalecom_reduce(
                 lambda v: chunked.chunk_scatter(v, idx, comp.chunk, size)
             )(vals)
         new_m = lowpass_update(m, gf, own, cfg.beta)
-        new_residues[path] = codec.encode(new_m, (size,))
+        new_residues[path] = codec.encode(new_m, (size,), key=enc_key)
         ghat_leaves.append(ghat.reshape(shape).astype(g.dtype))
 
         k = vals.shape[-1] if vals.ndim == 2 else int(np.prod(vals.shape[1:]))

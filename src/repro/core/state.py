@@ -5,11 +5,23 @@ For a model with P parameters and n data-parallel workers it is nÂ·P elements â€
 the binding memory cost at scale (DESIGN.md Â§5). This module provides:
 
   * ``init_state``      â€” zero residues per tensor
-  * residue codecs      â€” fp32 / bf16 / fp8(e4m3, scaled) storage
-                          (fp8 is a beyond-paper memory optimization; the
-                          residue tolerates quantization because it is itself
-                          an error accumulator â€” quantization error is re-fed
-                          next step)
+  * residue codecs      â€” fp32 / bf16 / fp8(e4m3, scaled) / fp8_ec storage
+                          (low-precision residues are a beyond-paper memory
+                          optimization; the residue tolerates quantization
+                          because it is itself an error accumulator â€”
+                          quantization error is re-fed next step)
+
+Low-precision encodes use STOCHASTIC rounding, keyed from ``ScaleComState.t``
+(via ``codec_key``) so the reduce stays pure and jittable. Round-to-nearest is
+biased: the EF memory is a long-lived accumulator, and once |m| outgrows the
+per-step increment by the mantissa width, nearest rounding silently swallows
+updates every step (the classic EF-precision failure; cf. DGC's sensitivity to
+memory precision). Stochastic rounding is the minimum-variance unbiased
+quantizer onto the grid, so codec error stays a zero-mean perturbation the
+error feedback itself absorbs. ``fp8_ec`` additionally carries a bf16
+compensation term per element (3B total) for near-fp32 trajectories at 25%
+memory savings. ``codec_roundtrip_error`` is the standing diagnostic
+(surfaced by analysis/report.py) verifying encodeâˆ˜decode stays a contraction.
 
 Residue storage layout follows ScaleComConfig.layout:
 
@@ -24,11 +36,14 @@ Residue storage layout follows ScaleComConfig.layout:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.compat import jax_compat
 
 Array = jnp.ndarray
 Pytree = Any
@@ -38,13 +53,48 @@ __all__ = [
     "ResidueCodec",
     "CODECS",
     "ScaleComState",
+    "codec_key",
+    "codec_roundtrip_error",
     "init_state",
     "residue_bytes",
     "storage_shape",
+    "stochastic_round",
 ]
 
 _FP8_MAX = 448.0  # e4m3 finite max
 _FP8_CHUNK = 512  # flat-layout scale granularity
+
+# Fixed PRNG salt for stochastic-rounding dither (same role as the random_k
+# salt in core.scalecom); codec_key folds in the tensor path then the step.
+_SR_SALT = 4
+
+
+def codec_key(path: str, t: Array):
+    """Per-(tensor, step) PRNG key for stochastic-rounding encodes.
+
+    ``t`` may be a traced int32 scalar (ScaleComState.t), so this composes
+    with jit; ``path`` is static and hashed at trace time.
+    """
+    h = zlib.crc32(path.encode()) & 0x7FFFFFFF
+    return jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(_SR_SALT), h), t)
+
+
+def stochastic_round(x: Array, key, dtype) -> Array:
+    """Unbiased stochastic rounding of fp32 ``x`` onto the bf16 grid.
+
+    Adds a uniform 16-bit dither below the bf16 mantissa boundary and
+    truncates: rounds to a neighbouring representable with probability equal
+    to the fractional position between them (exact SR â€” bf16 is fp32's top
+    16 bits). Non-finite inputs and dither overflow fall back to nearest.
+    """
+    f = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(f, jnp.uint32)
+    dither = jax.random.bits(key, x.shape, jnp.uint32) >> 16
+    out = jax.lax.bitcast_convert_type(
+        (bits + dither) & jnp.uint32(0xFFFF0000), jnp.float32
+    )
+    out = jnp.where(jnp.isfinite(f) & jnp.isfinite(out), out, f)
+    return out.astype(dtype)
 
 
 def storage_shape(param_shape: Shape, layout: str) -> Shape:
@@ -67,7 +117,12 @@ def storage_shape(param_shape: Shape, layout: str) -> Shape:
 
 
 class ResidueCodec:
-    """Encode/decode an (n, *storage) fp32 residue."""
+    """Encode/decode an (n, *storage) fp32 residue.
+
+    ``encode`` takes an optional PRNG ``key`` (from ``codec_key``); lossy
+    codecs use it for stochastic rounding and fall back to nearest rounding
+    when it is None (e.g. offline tools re-encoding a checkpoint).
+    """
 
     name: str = "fp32"
 
@@ -78,8 +133,8 @@ class ResidueCodec:
         del shape
         return enc["q"]
 
-    def encode(self, m: Array, shape: Shape) -> Pytree:
-        del shape
+    def encode(self, m: Array, shape: Shape, *, key=None) -> Pytree:
+        del shape, key
         return {"q": m}
 
     def nbytes(self, n: int, shape: Shape) -> int:
@@ -96,9 +151,11 @@ class _Bf16Codec(ResidueCodec):
         del shape
         return enc["q"].astype(jnp.float32)
 
-    def encode(self, m, shape):
+    def encode(self, m, shape, *, key=None):
         del shape
-        return {"q": m.astype(jnp.bfloat16)}
+        if key is None:
+            return {"q": m.astype(jnp.bfloat16)}
+        return {"q": stochastic_round(m, key, jnp.bfloat16)}
 
     def nbytes(self, n, shape):
         return n * int(np.prod(shape)) * 2
@@ -118,14 +175,15 @@ class _Fp8Codec(ResidueCodec):
         return -(-size // _FP8_CHUNK) * _FP8_CHUNK
 
     def init(self, n, shape):
+        qdt = jax_compat.float8_e4m3_dtype()
         if len(shape) == 1:
             p = self._padded(shape[0])
             return {
-                "q": jnp.zeros((n, p), jnp.float8_e4m3fn),
+                "q": jnp.zeros((n, p), qdt),
                 "scale": jnp.zeros((n, p // _FP8_CHUNK), jnp.float32),
             }
         return {
-            "q": jnp.zeros((n,) + shape, jnp.float8_e4m3fn),
+            "q": jnp.zeros((n,) + shape, qdt),
             "scale": jnp.zeros((n,) + shape[:-1], jnp.float32),
         }
 
@@ -138,32 +196,77 @@ class _Fp8Codec(ResidueCodec):
             return x.reshape(n, p)[:, : shape[0]]
         return q.astype(jnp.float32) * scale[..., None]
 
-    def encode(self, m, shape):
+    def encode(self, m, shape, *, key=None):
+        del key  # e4m3 stays nearest-rounded; fp8_ec carries the correction
         if len(shape) == 1:
             n = m.shape[0]
             p = self._padded(shape[0])
             mp = jnp.pad(m, ((0, 0), (0, p - shape[0]))).reshape(n, -1, _FP8_CHUNK)
             amax = jnp.max(jnp.abs(mp), axis=-1)
             scale = jnp.where(amax > 0, amax / _FP8_MAX, 1.0)
-            q = (mp / scale[..., None]).astype(jnp.float8_e4m3fn)
+            q = jax_compat.cast_to_e4m3(mp / scale[..., None])
             return {"q": q.reshape(n, p), "scale": scale}
         amax = jnp.max(jnp.abs(m), axis=-1)
         scale = jnp.where(amax > 0, amax / _FP8_MAX, 1.0)
-        q = (m / scale[..., None]).astype(jnp.float8_e4m3fn)
+        q = jax_compat.cast_to_e4m3(m / scale[..., None])
         return {"q": q, "scale": scale}
 
     def nbytes(self, n, shape):
         size = int(np.prod(shape))
+        q_item = jax_compat.float8_itemsize()
         if len(shape) == 1:
             p = self._padded(size)
-            return n * (p + 4 * p // _FP8_CHUNK)
-        return n * (size + 4 * size // shape[-1])
+            return n * (q_item * p + 4 * p // _FP8_CHUNK)
+        return n * (q_item * size + 4 * size // shape[-1])
+
+
+class _Fp8EcCodec(_Fp8Codec):
+    """Error-compensated e4m3: the fp8 encoding plus a bf16 correction term.
+
+    decode = qÂ·scale + c where c = SR_bf16(m âˆ’ qÂ·scale). The correction
+    captures the (â‰ˆ6% relative) e4m3 quantization error down to bf16 noise,
+    so the EF trajectory tracks the fp32 one to ~1e-4 at 3B/element â€” the
+    residue option for archs whose convergence can't absorb raw-fp8 noise
+    but whose memory budget can't hold fp32 (DESIGN.md Â§5 scale limits).
+    """
+
+    name = "fp8_ec"
+
+    def init(self, n, shape):
+        enc = super().init(n, shape)
+        enc["c"] = jnp.zeros(enc["q"].shape, jnp.bfloat16)
+        return enc
+
+    def decode(self, enc, shape):
+        base = super().decode({"q": enc["q"], "scale": enc["scale"]}, shape)
+        c = enc["c"].astype(jnp.float32)
+        if len(shape) == 1:
+            c = c[:, : shape[0]]
+        return base + c
+
+    def encode(self, m, shape, *, key=None):
+        enc = super().encode(m, shape)
+        base = super().decode(enc, shape)
+        resid = m - base
+        if len(shape) == 1:
+            resid = jnp.pad(resid, ((0, 0), (0, enc["q"].shape[1] - shape[0])))
+        if key is None:
+            enc["c"] = resid.astype(jnp.bfloat16)
+        else:
+            enc["c"] = stochastic_round(resid, key, jnp.bfloat16)
+        return enc
+
+    def nbytes(self, n, shape):
+        size = int(np.prod(shape))
+        extra = 2 * (self._padded(size) if len(shape) == 1 else size)
+        return super().nbytes(n, shape) + n * extra
 
 
 CODECS: Dict[str, ResidueCodec] = {
     "fp32": ResidueCodec(),
     "bf16": _Bf16Codec(),
     "fp8": _Fp8Codec(),
+    "fp8_ec": _Fp8EcCodec(),
 }
 
 
@@ -215,6 +318,46 @@ def init_state(
             continue
         residues[path] = codec.init(n_workers, storage_shape(leaf.shape, layout))
     return ScaleComState(residues=residues, t=jnp.zeros((), jnp.int32))
+
+
+def codec_roundtrip_error(
+    name: str,
+    *,
+    n: int = 4,
+    size: int = 2048,
+    steps: int = 5,
+    step_scale: float = 0.2,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Standing diagnostic: encodeâˆ˜decode error of one residue codec over an
+    EF-like accumulation loop (decoded value feeds the next step, exactly as
+    in ``scalecom_reduce``).
+
+    Returns per-step worst/last relative roundtrip error and the drift of the
+    quantized accumulator against an exact fp32 shadow. ``worst_step`` < 1
+    is the contraction property ScaleCom's Theorem 1 needs from the memory;
+    ``drift`` is the end-to-end bias the convergence analysis actually feels.
+    Rendered as a table by ``analysis/report.py`` and pinned by
+    tests/test_compat.py.
+    """
+    codec = CODECS[name]
+    key = jax.random.PRNGKey(seed)
+    m = jnp.zeros((n, size), jnp.float32)  # quantized-path accumulator (decoded)
+    shadow = jnp.zeros((n, size), jnp.float32)  # exact fp32 accumulator
+    worst = 0.0
+    last = 0.0
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        g = step_scale * jax.random.normal(sub, (n, size))
+        target = m + g
+        shadow = shadow + g
+        enc = codec.encode(target, (size,), key=codec_key("<roundtrip>", jnp.int32(t)))
+        m = codec.decode(enc, (size,))
+        denom = float(jnp.linalg.norm(target)) or 1.0
+        last = float(jnp.linalg.norm(m - target)) / denom
+        worst = max(worst, last)
+    drift = float(jnp.linalg.norm(m - shadow)) / (float(jnp.linalg.norm(shadow)) or 1.0)
+    return {"worst_step": worst, "last_step": last, "drift": drift}
 
 
 def residue_bytes(

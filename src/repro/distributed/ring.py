@@ -3,7 +3,8 @@ extends to ring all-reduce settings") as a manual-collective backend.
 
 The primary runtime (repro.training.train_step) expresses ScaleCom in pure
 GSPMD; this module is the dual formulation with hand-written collectives
-inside ``jax.shard_map``: each device holds ITS worker's error-feedback state
+inside ``shard_map`` (via the compat layer, so it runs on 0.4.x and 0.7.x
+alike): each device holds ITS worker's error-feedback state
 and gradient shard, and the only collectives are
 
     psum(masked index row)   — the leader's O(k) index broadcast
@@ -23,6 +24,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import jax_compat
 from repro.core import chunked
 from repro.core.compressors import CompressorConfig
 
@@ -45,7 +47,7 @@ def clt_ring_reduce(
     g_local/m_local: this worker's flat (size,) gradient / residue.
     Returns (ghat_dense, m_new) — ghat identical on every worker (psum'd).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = jax_compat.axis_size(axis_name)
     me = jax.lax.axis_index(axis_name)
     leader = jnp.mod(t, n)
     size = g_local.shape[-1]
@@ -69,7 +71,7 @@ def make_ring_reducer(mesh, axis_name: str, cfg: CompressorConfig, beta: float):
     Maps the leading worker dim onto ``axis_name``; inside, each device sees
     its own (size,) row and runs the manual Algorithm 1.
     """
-    from jax.sharding import PartitionSpec as P
+    P = jax_compat.P
 
     def per_device(g_row, m_row, t):
         ghat, m_new = clt_ring_reduce(
@@ -77,7 +79,7 @@ def make_ring_reducer(mesh, axis_name: str, cfg: CompressorConfig, beta: float):
         )
         return ghat[None], m_new[None]
 
-    return jax.shard_map(
+    return jax_compat.shard_map(
         per_device,
         mesh=mesh,
         in_specs=(P(axis_name, None), P(axis_name, None), P()),

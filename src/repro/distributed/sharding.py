@@ -25,7 +25,8 @@ import contextvars
 from typing import Any, Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat.jax_compat import Mesh, NamedSharding, P
 
 Pytree = Any
 

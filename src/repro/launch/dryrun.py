@@ -25,7 +25,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import jax_compat
+from repro.compat.jax_compat import Mesh, NamedSharding, P
 
 from repro.analysis.roofline import analyze_compiled
 from repro.configs import SHAPES, registry
@@ -267,7 +269,7 @@ def lower_train(
         microbatches=settings.get("microbatches", 1),
     )
 
-    with jax.set_mesh(mesh):
+    with jax_compat.set_mesh(mesh):
         jitted = jax.jit(
             step_fn,
             in_shardings=(to_sharding(state_specs), to_sharding(batch_specs)),
@@ -307,7 +309,7 @@ def lower_serve(
             is_leaf=lambda x: isinstance(x, P),
         )
 
-    with jax.set_mesh(mesh):
+    with jax_compat.set_mesh(mesh):
         if shape.kind == "prefill":
             from repro.training.serve import batch_axes
 

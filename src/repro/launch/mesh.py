@@ -7,7 +7,7 @@ entrypoint sets XLA_FLAGS for 512 host devices before any jax import.
 
 from __future__ import annotations
 
-import jax
+from repro.compat import jax_compat
 
 __all__ = ["make_production_mesh", "make_test_mesh", "HW"]
 
@@ -16,16 +16,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax_compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(4, 2), axes=("data", "model")):
     """Small host-device mesh for CI-scale distributed tests."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax_compat.make_mesh(shape, axes)
 
 
 class HW:

@@ -18,6 +18,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.compat import jax_compat
 from repro.configs import registry
 from repro.core.compressors import CompressorConfig
 from repro.core.scalecom import ScaleComConfig
@@ -41,7 +42,8 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=64)
     ap.add_argument("--beta", type=float, default=0.1)
     ap.add_argument("--warmup-steps", type=int, default=10)
-    ap.add_argument("--residue-dtype", default="fp32", choices=["fp32", "bf16", "fp8"])
+    ap.add_argument("--residue-dtype", default="fp32",
+                    choices=["fp32", "bf16", "fp8", "fp8_ec"])
     ap.add_argument("--groups", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
@@ -52,6 +54,11 @@ def main(argv=None):
     cfg = registry.smoke(args.arch) if args.arch in registry._MODULES else None
     if cfg is None:
         raise SystemExit(f"unknown arch {args.arch}; choices: {list(registry._MODULES)}")
+
+    print(f"[launch.train] {jax_compat.describe()}")
+    if args.residue_dtype.startswith("fp8") and not jax_compat.has_float8():
+        print("[launch.train] float8 unavailable on this jax; "
+              "residues fall back to emulated e4m3 (bf16 storage)")
 
     model = build_model(cfg, compute_dtype="float32", loss_chunk=64)
     sc_cfg = ScaleComConfig(

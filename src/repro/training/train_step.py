@@ -28,6 +28,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat.jax_compat import NamedSharding, PartitionSpec
 from repro.core.scalecom import ScaleComConfig, dense_reduce, scalecom_reduce
 from repro.core.state import ScaleComState
 from repro.optim.optimizer import Optimizer
@@ -111,8 +112,6 @@ def build_train_step(
             return tree
 
         def pin_one(x, s):
-            from jax.sharding import NamedSharding, PartitionSpec
-
             spec = PartitionSpec(*tuple(s.spec)[1:])  # drop worker axis entry
             return jax.lax.with_sharding_constraint(
                 x, NamedSharding(s.mesh, spec)

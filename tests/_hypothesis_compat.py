@@ -1,0 +1,123 @@
+"""Optional-``hypothesis`` shim for the property-based test modules.
+
+When the real package is installed (see requirements-dev.txt) this module is
+a pure re-export and the tests get genuine randomized property testing. When
+it is not (hermetic CI images, no network), a minimal fixed-examples fallback
+keeps the same test code collecting and running: ``@given`` expands into a
+deterministic sweep of examples drawn from the declared strategies with a
+fixed seed, always including each strategy's boundary values. That loses
+shrinking and adaptive search, but preserves the regression value of the
+properties on a known example set.
+
+Usage in test modules (instead of ``from hypothesis import ...``):
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import itertools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A declared value source: boundary examples + seeded random draws."""
+
+        def __init__(self, boundary, draw):
+            self.boundary = list(boundary)
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                boundary=[min_value, max_value],
+                draw=lambda rng: rng.randint(min_value, max_value),
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                boundary=elements[:1] + elements[-1:],
+                draw=lambda rng: rng.choice(elements),
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                boundary=[min_value, max_value],
+                draw=lambda rng: rng.uniform(min_value, max_value),
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(boundary=[False, True], draw=lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    class settings:
+        """Decorator recording max_examples on the (already-wrapped) test fn."""
+
+        def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._hc_max_examples = self.max_examples
+            return fn
+
+    def given(**strategy_kwargs):
+        import inspect
+
+        names = sorted(strategy_kwargs)
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                max_examples = getattr(wrapper, "_hc_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(f"hc:{fn.__module__}.{fn.__qualname__}")
+                examples = []
+                # boundary sweep first (zipped, not the full cross product)
+                n_boundary = max(len(strategy_kwargs[k].boundary) for k in names)
+                for i in range(min(n_boundary, max_examples)):
+                    examples.append(
+                        {
+                            k: strategy_kwargs[k].boundary[
+                                i % len(strategy_kwargs[k].boundary)
+                            ]
+                            for k in names
+                        }
+                    )
+                while len(examples) < max_examples:
+                    examples.append(
+                        {k: strategy_kwargs[k].draw(rng) for k in names}
+                    )
+                for ex in examples:
+                    try:
+                        fn(*args, **dict(kwargs, **ex))
+                    except Exception as e:
+                        raise AssertionError(
+                            f"fixed-example property failed for {ex!r}: {e}"
+                        ) from e
+
+            # hide the strategy-filled params from pytest's fixture resolution
+            # (real hypothesis does the same via its own wrapper signature)
+            params = [
+                p
+                for p in inspect.signature(fn).parameters.values()
+                if p.name not in strategy_kwargs
+            ]
+            wrapper.__signature__ = inspect.Signature(params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
+from repro.compat.jax_compat import float8_e4m3_dtype
 from repro.data import SyntheticLM, make_batches
 
 
@@ -55,7 +56,7 @@ def test_checkpoint_exotic_dtypes(tmp_path):
     tree = {
         "a": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
         "b": {"c": jnp.arange(5, dtype=jnp.int32)},
-        "q": jnp.asarray([1.0, -2.0], jnp.float32).astype(jnp.float8_e4m3fn),
+        "q": jnp.asarray([1.0, -2.0], jnp.float32).astype(float8_e4m3_dtype()),
     }
     d = str(tmp_path / "ck")
     checkpoint.save(d, 3, tree)

@@ -46,6 +46,7 @@ def test_sharded_step_matches_single_device():
         from repro.optim import make_optimizer, schedule
         from repro.training import init_train_state
         from repro.training.train_step import build_train_step
+        from repro.compat import jax_compat
         from repro.distributed.sharding import specs_for_axes
         from repro.launch.mesh import make_test_mesh
 
@@ -68,7 +69,7 @@ def test_sharded_step_matches_single_device():
                               is_leaf=lambda x: isinstance(x, P))
         step_sh = build_train_step(model, opt, schedule.constant(0.05), sc,
                                    n_workers=n, worker_axis="data", worker_shardings=wshard)
-        with jax.set_mesh(mesh):
+        with jax_compat.set_mesh(mesh):
             s_sh, m_sh = jax.jit(step_sh)(state, batch)
         for a, b in zip(jax.tree.leaves(s_ref.params), jax.tree.leaves(s_sh.params)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5)
@@ -91,6 +92,7 @@ def test_no_dense_gradient_allreduce_in_hlo():
         from repro.training import init_train_state
         from repro.training.train_step import build_train_step
         from repro.distributed.sharding import specs_for_axes
+        from repro.compat import jax_compat
         from repro.launch.mesh import make_test_mesh
         from repro.analysis.hlo import analyze_module
 
@@ -120,7 +122,7 @@ def test_no_dense_gradient_allreduce_in_hlo():
                 lambda x: dsh if (hasattr(x, "ndim") and x.ndim and x.shape[0] == n) else rep,
                 state)
             batch_sh = jax.tree.map(lambda x: dsh, batch)
-            with jax.set_mesh(mesh):
+            with jax_compat.set_mesh(mesh):
                 return jax.jit(fn, in_shardings=(state_sh, batch_sh)).lower(state, batch).compile()
 
         sc_c = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=64), beta=0.1, min_size=512)
@@ -144,6 +146,7 @@ def test_ring_backend_matches_gspmd_path():
         from repro.core.compressors import CompressorConfig
         from repro.core.scalecom import ScaleComConfig, scalecom_reduce
         from repro.core.state import init_state
+        from repro.compat import jax_compat
         from repro.distributed.ring import make_ring_reducer
         from repro.launch.mesh import make_test_mesh
 
@@ -161,7 +164,7 @@ def test_ring_backend_matches_gspmd_path():
 
         # explicit shard_map ring path
         reducer = make_ring_reducer(mesh, "data", cfg, beta)
-        with jax.set_mesh(mesh):
+        with jax_compat.set_mesh(mesh):
             ghat_rows, m_new = jax.jit(reducer)(g, m, jnp.int32(0))
         np.testing.assert_allclose(np.asarray(ghat_rows[0]), np.asarray(ghat1["w"]),
                                    rtol=1e-5, atol=1e-6)

@@ -4,7 +4,7 @@ error-feedback compression that must hold for ANY input stream."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import chunked
 from repro.core.compressors import CompressorConfig

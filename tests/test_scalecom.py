@@ -8,6 +8,7 @@ import pytest
 
 from repro.core.compressors import CompressorConfig
 from repro.core.scalecom import ScaleComConfig, dense_reduce, scalecom_reduce
+from repro.compat.jax_compat import float8_e4m3_dtype
 from repro.core.state import CODECS, init_state, residue_bytes
 
 CHUNK = 8
@@ -233,7 +234,7 @@ def test_rowwise_fp8_residue():
     for _ in range(3):
         ghat, state, _ = scalecom_reduce({"w": g}, state, cfg)
     assert np.isfinite(np.asarray(ghat["w"])).all()
-    assert state.residues["['w']"]["q"].dtype == jnp.float8_e4m3fn
+    assert state.residues["['w']"]["q"].dtype == float8_e4m3_dtype()
 
 
 def test_per_tensor_rate_rules():
