@@ -1,46 +1,101 @@
-"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness path) vs the
-pure-jnp oracle, plus the fused-vs-unfused residue update HBM-traffic model.
+"""Kernel micro-benchmarks: the backend sweep (jnp vs pallas-interpret) plus
+the fused-vs-unfused residue-update HBM-traffic model.
 
-On this CPU container the interpret-mode timing is NOT the TPU performance
-story; the derived column therefore reports the analytic HBM-traffic ratio the
-fusion buys on TPU (the quantity that matters at P = trillions of residues).
+Sweeps both registered kernel backends (repro.backends) over the bench sizes
+for the two hot-path ops — chunk selection and the fused EF update — and
+writes a machine-readable ``BENCH_kernels.json`` summary next to the CSV
+stdout rows (consumed by CI artifacts and cross-PR trend tracking).
+
+On this CPU container the pallas timings are interpret mode — NOT the TPU
+performance story; they track dispatch/interpret overhead and correctness.
+The derived column therefore also reports the analytic HBM-traffic ratio the
+fusion buys on TPU: the unfused chain reads/writes the residue ~7 times per
+step vs ~3 for the fused kernel (the quantity that matters at P = trillions
+of residues). Tile geometry per (op, chunk, dtype) is whatever the
+repro.backends.autotune cache holds for this device — run autotune first to
+sweep BLOCK_CHUNKS.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, time_fn
-from repro.core import chunked
-from repro.kernels import ref
+from repro.backends import pallas_available, resolve_backend
 
-SIZE = 1 << 20
+SIZES = (1 << 16, 1 << 20)
 CHUNK = 64
+JSON_PATH = os.environ.get("SCALECOM_BENCH_JSON", "BENCH_kernels.json")
+
+
+def _backends() -> tuple[str, ...]:
+    # jnp rows must survive jax builds without the pallas package
+    return ("jnp", "pallas") if pallas_available() else ("jnp",)
+
+
+def _bench_backend(be, size: int) -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (size,))
+    m = jax.random.normal(jax.random.PRNGKey(1), (size,))
+    out = []
+
+    sel = jax.jit(lambda a: be.select(a, CHUNK))
+    us = time_fn(sel, x)
+    out.append({"op": "select", "backend": be.name, "size": size, "chunk": CHUNK,
+                "us_per_call": us, "elems_per_us": size / us})
+
+    idx = sel(x)[0]
+    upd = jax.jit(lambda mm, gg, ii: be.ef_update(mm, gg, ii, 0.1, CHUNK))
+    us = time_fn(upd, m, x, idx)
+    out.append({"op": "ef_update", "backend": be.name, "size": size,
+                "chunk": CHUNK, "us_per_call": us, "elems_per_us": size / us})
+    return out
 
 
 def run() -> list[Row]:
     rows: list[Row] = []
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (SIZE,))
-    m = jax.random.normal(jax.random.PRNGKey(1), (SIZE,))
+    entries: list[dict] = []
 
-    sel = jax.jit(lambda x: ref.chunk_argmax_ref(x, CHUNK))
-    us = time_fn(sel, x)
-    rows.append(("kernels/chunk_select_jnp", us, f"elems_per_us={SIZE/us:.0f}"))
+    backends = _backends()
+    for name in backends:
+        be = resolve_backend(name)
+        for size in SIZES:
+            for e in _bench_backend(be, size):
+                entries.append(e)
+                derived = f"elems_per_us={e['elems_per_us']:.0f}"
+                if e["op"] == "ef_update":
+                    # unfused: ef=m+g (2R 1W) + gather (1R) + scatter (1W) +
+                    # m update (2R 1W) ~= 7 passes; fused kernel: ~3
+                    derived += ";fused_hbm_ratio=7/3=2.3x"
+                rows.append(
+                    (f"kernels/{e['op']}_{name}_n{size}", e["us_per_call"], derived)
+                )
 
-    idx = sel(x)[0]
-    upd = jax.jit(lambda m, g, i: ref.ef_update_ref(m, g, i, 0.1, CHUNK))
-    us = time_fn(upd, m, x, idx)
-    # unfused reads/writes: ef=m+g (2R 1W) + gather (1R) + scatter (1W) +
-    # m update (2R 1W) ~= 7 passes; fused kernel: m,g in / m',vals out ~= 3
-    rows.append(("kernels/ef_update_jnp", us, "fused_hbm_ratio=7/3=2.3x"))
+    # cross-backend correctness probe on a tail-chunk size (the CI canary)
+    ok = None
+    if "pallas" in backends:
+        jnp_be, pal_be = resolve_backend("jnp"), resolve_backend("pallas")
+        small = jax.random.normal(jax.random.PRNGKey(2), ((1 << 14) + 17,))
+        i1, v1 = jnp_be.select(small, CHUNK)
+        i2, v2 = pal_be.select(small, CHUNK)
+        ok = bool(jnp.all(i1 == i2)) and bool(jnp.allclose(v1, v2))
+        rows.append(("kernels/backend_parity_allclose", 0.0, f"match={ok}"))
 
-    # Pallas interpret-mode correctness probe (tiny: interpret is python-slow)
-    from repro.kernels import ops
-    small = x[: 1 << 14]
-    i1, v1 = ops.chunk_select(small, CHUNK)
-    i2, v2 = ref.chunk_argmax_ref(small, CHUNK)
-    ok = bool(jnp.all(i1 == i2)) and bool(jnp.allclose(v1, v2))
-    rows.append(("kernels/pallas_interpret_allclose", 0.0, f"match={ok}"))
+    summary = {
+        "device": jax.devices()[0].device_kind,
+        "default_backend": jax.default_backend(),
+        "chunk": CHUNK,
+        "parity_ok": ok,
+        "entries": entries,
+    }
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(summary, f, indent=1)
+        rows.append(("kernels/bench_json", 0.0, f"path={JSON_PATH}"))
+    except OSError as e:  # read-only checkout: keep the stdout rows
+        rows.append(("kernels/bench_json", 0.0, f"skipped={e.__class__.__name__}"))
     return rows

@@ -1,0 +1,116 @@
+"""Hierarchical multi-pod ScaleCom: dense intra-pod, CLT-k across pods.
+
+Simulates POD_COUNT pods of RANKS_PER_POD data ranks each (ROADMAP item 2).
+With ``ScaleComConfig(groups=POD_COUNT)`` the reduce is two-level:
+
+  * intra-pod  — the RANKS_PER_POD gradients inside each pod are averaged
+                 densely (the fast ICI all-reduce; free in this model), and
+  * inter-pod  — CLT-k runs across the POD_COUNT pod-mean gradients, so the
+                 slow DCN link only ever carries k values + k indices per
+                 step instead of the dense gradient.
+
+The driver trains a smoke transformer this way, then checks the measured
+per-step DCN payload (``comm_bytes_*`` from scalecom_reduce's stats) against
+the byte accounting of the Appendix-F performance model
+(repro.analysis.perfmodel) — the example *asserts* the predicted DCN-byte
+reduction, it doesn't just print it.
+
+    PYTHONPATH=src python examples/multipod_groups.py
+"""
+
+import math
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.analysis.perfmodel import PerfConfig, _comm_bytes
+from repro.configs import registry
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig
+from repro.data import make_batches
+from repro.models import build_model
+from repro.optim import make_optimizer, schedule
+from repro.training import TrainLoop, init_train_state, run_training
+
+POD_COUNT = 2          # ScaleCom workers = pods (groups=2)
+RANKS_PER_POD = 4      # dense intra-pod reduction
+CHUNK = 64             # DCN compression rate (topm=1)
+MIN_SIZE = 512
+STEPS, WARMUP = 24, 4
+
+
+def _payload_prediction(params) -> tuple[float, float, float]:
+    """(k_values, bytes_up, bytes_dense) per step from the parameter shapes —
+    the same accounting scalecom_reduce's stats use (values + int32 indices
+    for tensors >= MIN_SIZE, dense fp32 below)."""
+    k = up = dense = 0.0
+    for leaf in jax.tree.leaves(params):
+        size = int(np.prod(leaf.shape)) if leaf.ndim else 1
+        dense += 4.0 * size
+        if size < MIN_SIZE:
+            up += 4.0 * size
+        else:
+            n_chunks = math.ceil(size / CHUNK)
+            k += n_chunks
+            up += 8.0 * n_chunks  # 4B value + 4B index per chunk
+    return k, up, dense
+
+
+def main() -> None:
+    n_ranks = POD_COUNT * RANKS_PER_POD
+    cfg = registry.smoke("paper-transformer-base")
+    model = build_model(cfg, compute_dtype="float32", loss_chunk=16)
+    sc = ScaleComConfig(
+        compressor=CompressorConfig("clt_k", chunk=CHUNK),
+        beta=0.3,
+        min_size=MIN_SIZE,
+        groups=POD_COUNT,
+        warmup_steps=WARMUP,
+    )
+    opt = make_optimizer("sgdm")
+    loop = TrainLoop(model=model, optimizer=opt, schedule=schedule.constant(0.05),
+                     sc_cfg=sc, n_workers=n_ranks, log_every=8)
+    state, _ = init_train_state(model, opt, sc, jax.random.PRNGKey(0),
+                                n_workers=n_ranks)
+
+    # Hierarchical residue granularity: one EF memory per POD, not per rank.
+    for path, enc in state.sc_state.residues.items():
+        lead = jax.tree.leaves(enc)[0].shape[0]
+        assert lead == POD_COUNT, (path, lead)
+
+    print(f"--- {POD_COUNT} pods x {RANKS_PER_POD} ranks, CLT-k across pods "
+          f"(chunk={CHUNK}) ---")
+    batches = make_batches(cfg.vocab, n_ranks, 2, 64, seed=0)
+    state, hist = run_training(loop, state, batches, STEPS)
+    assert hist[-1]["loss"] < hist[0]["loss"], "smoke training did not learn"
+
+    # -- DCN-byte accounting vs the perf model ------------------------------
+    last = hist[-1]  # a compressed step (past warmup)
+    meas_up = last["comm_bytes_per_worker"]
+    meas_dense = last["comm_bytes_dense"]
+    k, pred_up, pred_dense = _payload_prediction(state.params)
+    np.testing.assert_allclose(meas_up, pred_up, rtol=1e-6)
+    np.testing.assert_allclose(meas_dense, pred_dense, rtol=1e-6)
+
+    # Full DCN round trip per pod: up (k values + k indices) + down (k reduced
+    # values) vs the dense scheme's gradient up + gradient down. Compare the
+    # measured reduction with the Appendix-F model's byte formulas at the same
+    # (params, rate, workers) point — they must agree to tail-chunk rounding.
+    meas_ratio = (2 * meas_dense) / (meas_up + 4.0 * k)
+    P = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
+    pm = PerfConfig(params=P, compression=CHUNK, workers=POD_COUNT, topology="ps")
+    pred_ratio = _comm_bytes(pm, "none") / _comm_bytes(pm, "scalecom")
+    print(f"per-pod DCN bytes/step: scalecom={meas_up + 4 * k:,.0f} "
+          f"dense={2 * meas_dense:,.0f}")
+    print(f"DCN-byte reduction: measured {meas_ratio:.1f}x, "
+          f"perfmodel predicts {pred_ratio:.1f}x")
+    assert meas_ratio > 0.85 * pred_ratio, (meas_ratio, pred_ratio)
+    assert meas_ratio < 1.15 * pred_ratio, (meas_ratio, pred_ratio)
+    print("OK: hierarchical CLT-k hits the perf model's DCN reduction.")
+
+
+if __name__ == "__main__":
+    main()

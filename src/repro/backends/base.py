@@ -1,0 +1,211 @@
+"""Kernel-backend protocol and registry — the dispatch layer of the hot path.
+
+ScaleCom's per-step compute cost is the chunk-wise selection + error-feedback
+update (paper Table 1: ~3 FLOPs/element for the compressor; the EF residue is
+the largest state in the system). ``scalecom_reduce`` routes every chunked
+operation through a ``KernelBackend`` so the same algorithm runs on the
+pure-jnp oracles (CPU, any-device correctness path) or the Pallas TPU kernels
+(fused, autotuned — see benchmarks/bench_kernels.py for the measured sweep),
+selected per run by ``resolve_backend``.
+
+Protocol
+--------
+A backend implements three *primitive* trailing-axis ops; everything else has
+a default composition in this base class:
+
+  select_indices(x, chunk, topm) -> per-chunk magnitude top-m offsets
+  gather(x, idx, chunk)          -> values at per-chunk offsets
+  scatter(vals, idx, chunk, size)-> dense array from (offset, value) pairs
+
+All ops are batch-aware: ``x`` is (..., n) and the last axis is the chunked
+buffer, so a worker-stacked (n_workers, size) tensor is one call (and, on the
+Pallas backend, one kernel launch) — callers never vmap a backend op. Derived
+ops that backends override for fusion:
+
+  select(x, chunk, topm)            -> (idx, vals) in one pass
+  ef_update(m, g, idx, beta, chunk) -> (m', vals): the fused Eq. 5 residue
+                                       update (ef=m+g, gather, scatter, axpy
+                                       in one read/write per tile)
+
+plus the ``rw_*`` rowwise variants operating on a pre-padded trailing axis
+(Cp % chunk == 0, see core.chunked rw_* docs). The base class forwards them
+to the flat ops — which is always sound because the rowwise contract
+guarantees the trailing dim is already a chunk multiple — so a minimal
+backend is exactly {select_indices, gather, scatter}.
+
+Resolution
+----------
+``resolve_backend(spec)`` with spec one of:
+
+  "jnp"     the pure-jnp reference backend (core.chunked ops)
+  "pallas"  the Pallas kernels; native on TPU, interpret mode elsewhere
+  "auto"    call-time probes, compat-layer style (repro.compat.jax_compat):
+            the SCALECOM_BACKEND env var wins if set; otherwise pallas iff
+            the pallas package imports AND jax.default_backend() == "tpu"
+            (interpret mode is a correctness path, not a fast CPU path);
+            jnp otherwise.
+  a KernelBackend instance — returned as-is (tests, custom backends)
+
+Probes run at call time, not import time, so tests can monkeypatch either
+branch and deployments that hot-swap jax stay correct. Third-party backends
+register with ``register_backend(name, factory)``.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+__all__ = [
+    "KernelBackend",
+    "register_backend",
+    "available_backends",
+    "resolve_backend",
+    "pallas_available",
+]
+
+
+class KernelBackend:
+    """Dispatch target for the chunked hot-path ops (see module docstring)."""
+
+    name: str = "base"
+
+    # -- primitives (implement these) ------------------------------------
+
+    def select_indices(self, x: Array, chunk: int, topm: int = 1) -> Array:
+        """Per-chunk magnitude top-m offsets along the last axis.
+
+        x: (..., n). Returns int32 (..., n_chunks) for topm == 1, else
+        (..., n_chunks, topm) ordered by descending magnitude (ties to the
+        lower offset, matching jax.lax.top_k).
+        """
+        raise NotImplementedError
+
+    def gather(self, x: Array, idx: Array, chunk: int, topm: int = 1) -> Array:
+        """Values of (..., n) ``x`` at per-chunk offsets ``idx``.
+
+        idx broadcasts against x's leading dims (shared leader indices vs
+        per-worker data) and ends in (..., n_chunks) or, for topm > 1,
+        (..., n_chunks, topm) — pass ``topm``; trailing shape alone cannot
+        distinguish a shared (n_chunks, topm) set from a worker-stacked
+        (n_workers, n_chunks) one. Output follows the broadcast of idx.
+        """
+        raise NotImplementedError
+
+    def scatter(
+        self, vals: Array, idx: Array, chunk: int, size: int, topm: int = 1
+    ) -> Array:
+        """Dense (..., size) with per-chunk ``vals`` at ``idx``, else zeros.
+
+        vals and idx broadcast against each other; for topm > 1 both end in
+        (..., n_chunks, topm) (pass ``topm`` — trailing shape alone is
+        ambiguous when topm == n_chunks). Writes into the zero-padded tail
+        chunk are dropped by the final slice to ``size``.
+        """
+        raise NotImplementedError
+
+    # -- derived (override for fusion) ------------------------------------
+
+    def select(self, x: Array, chunk: int, topm: int = 1) -> Tuple[Array, Array]:
+        """Per-chunk (indices, values) — fused on kernel backends."""
+        idx = self.select_indices(x, chunk, topm)
+        return idx, self.gather(x, idx, chunk, topm)
+
+    def ef_update(
+        self, m: Array, g: Array, idx: Array, beta: float, chunk: int,
+        topm: int = 1,
+    ) -> Tuple[Array, Array]:
+        """Fused low-pass EF residue update (paper Eq. 5) along the last axis.
+
+        m, g: (..., size); idx broadcastable per-chunk offsets (see gather
+        for the topm convention). Returns (m_new, vals) where vals = (m+g)
+        gathered at idx and m_new = m + beta * (g - scatter(vals, idx)).
+        """
+        ef = m + g
+        vals = self.gather(ef, idx, chunk, topm)
+        own = self.scatter(vals, idx, chunk, m.shape[-1], topm)
+        return m + beta * (g - own), vals
+
+    # -- rowwise (layout-preserving) variants ------------------------------
+    #
+    # Trailing axis is pre-padded to a chunk multiple by the caller
+    # (core.chunked.rw_pad), so the flat ops apply verbatim; backends with
+    # genuinely different rowwise kernels override these.
+
+    def rw_select_indices(self, x: Array, chunk: int) -> Array:
+        return self.select_indices(x, chunk, 1)
+
+    def rw_gather(self, x: Array, idx: Array, chunk: int) -> Array:
+        return self.gather(x, idx, chunk)
+
+    def rw_scatter(self, vals: Array, idx: Array, chunk: int, cp: int) -> Array:
+        return self.scatter(vals, idx, chunk, cp)  # rowwise is top-1 only
+
+    def rw_ef_update(
+        self, m: Array, g: Array, idx: Array, beta: float, chunk: int
+    ) -> Tuple[Array, Array]:
+        return self.ef_update(m, g, idx, beta, chunk)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return f"<KernelBackend {self.name}>"
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], KernelBackend]] = {}
+
+_ENV_VAR = "SCALECOM_BACKEND"
+
+
+def register_backend(name: str, factory: Callable[[], KernelBackend]) -> None:
+    """Register a backend factory under ``name`` (resolved lazily)."""
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def pallas_available() -> bool:
+    """Call-time probe: does this jax ship the pallas package?"""
+    try:
+        from jax.experimental import pallas  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def resolve_backend(
+    spec: Union[str, KernelBackend, None] = "auto",
+) -> KernelBackend:
+    """Resolve a backend spec ("auto" | "jnp" | "pallas" | instance).
+
+    See the module docstring for the "auto" probe order. Raises ValueError
+    for unknown names (listing what is registered).
+    """
+    if isinstance(spec, KernelBackend):
+        return spec
+    name = spec or "auto"
+    if name == "auto":
+        env = os.environ.get(_ENV_VAR, "").strip()
+        if env:
+            name = env
+        elif pallas_available() and jax.default_backend() == "tpu":
+            name = "pallas"
+        else:
+            name = "jnp"
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)} (register_backend to add one)"
+        ) from None
+    return factory()

@@ -1,0 +1,78 @@
+"""Pure-jnp kernel backend: the reference implementation and the CPU path.
+
+Wraps the chunked-op oracles in ``repro.core.chunked``. The flat (arbitrary
+trailing size) ops pad the last axis and run the rw_* trailing-axis forms —
+for 1-D inputs that is literally the same computation as the classic
+chunk_argmax/chunk_gather/chunk_scatter, and for worker-stacked inputs it
+is their vmap, expressed as plain broadcasting so XLA sees one fused loop.
+
+This backend is bitwise-deterministic against the Pallas backend in interpret
+mode (asserted by tests/test_backends.py) and is what "auto" resolves to
+anywhere without a TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import KernelBackend, register_backend
+from repro.core import chunked
+
+Array = jnp.ndarray
+
+__all__ = ["JnpBackend"]
+
+
+class JnpBackend(KernelBackend):
+    name = "jnp"
+
+    def select_indices(self, x: Array, chunk: int, topm: int = 1) -> Array:
+        xp = chunked.rw_pad(x, chunk)
+        if topm == 1:
+            return chunked.rw_argmax(xp, chunk)
+        c = chunked.rw_view(xp, chunk)
+        _, idx = jax.lax.top_k(jnp.abs(c), topm)
+        return idx.astype(jnp.int32)
+
+    def gather(self, x: Array, idx: Array, chunk: int, topm: int = 1) -> Array:
+        xp = chunked.rw_pad(x, chunk)
+        if topm == 1:  # idx ends in (..., n_chunks)
+            return chunked.rw_gather(xp, idx, chunk)
+        # top-m: mask-sum per kept entry (same int32-safety rationale as
+        # chunked.chunk_gather — no row iota over n_chunks).
+        c = chunked.rw_view(xp, chunk)
+        cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
+        outs = [
+            jnp.sum(
+                jnp.where(cols == idx[..., j, None], c, jnp.zeros((), c.dtype)),
+                axis=-1,
+            )
+            for j in range(idx.shape[-1])
+        ]
+        return jnp.stack(outs, axis=-1)
+
+    def scatter(
+        self, vals: Array, idx: Array, chunk: int, size: int, topm: int = 1
+    ) -> Array:
+        cp = chunked.num_chunks(size, chunk) * chunk
+        if topm > 1:
+            out = None
+            for j in range(topm):  # top-m: m is small and static
+                z = chunked.rw_scatter(vals[..., j], idx[..., j], chunk, cp)
+                out = z if out is None else out + z
+            return out[..., :size]
+        return chunked.rw_scatter(vals, idx, chunk, cp)[..., :size]
+
+    # ef_update / select: base-class compositions (the unfused 7-pass chain
+    # the Pallas backend's fusion is benchmarked against).
+
+
+@functools.lru_cache(maxsize=1)
+def _instance() -> JnpBackend:
+    return JnpBackend()
+
+
+register_backend("jnp", _instance)

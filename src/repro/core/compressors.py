@@ -27,21 +27,32 @@ Compressors implemented (paper Table 1 comparisons):
 All selection is chunk-wise (chunk C, top-m per chunk) to match the paper's
 production implementation; exact dense top-k equivalents are available through
 ``exact=True`` for analysis at small sizes.
+
+Every chunked op dispatches through a ``repro.backends`` KernelBackend
+(pure-jnp oracles or the Pallas TPU kernels — top-1 *and* top-m, there is no
+silent jnp fallback). Callers pass a resolved backend; the default resolves
+"auto" (env var > TPU probe > jnp).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+import warnings
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import chunked
-
 Array = jnp.ndarray
 
-__all__ = ["CompressorConfig", "compress", "COMPRESSORS", "compression_rate"]
+__all__ = [
+    "CompressorConfig",
+    "compress",
+    "select_indices",
+    "resolve_backend_with_deprecation",
+    "COMPRESSORS",
+    "compression_rate",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,8 +64,9 @@ class CompressorConfig:
     topm:       entries kept per chunk
     exact:      use exact dense top-k over the whole tensor instead of chunked
                 selection (analysis only; k = size * topm / chunk)
-    use_kernel: route chunk selection through the Pallas kernel path when
-                available (falls back to jnp on CPU automatically).
+    use_kernel: DEPRECATED — use ScaleComConfig(backend="pallas") (or pass a
+                resolved backend to ``compress``). When set, it is mapped onto
+                the pallas backend with a DeprecationWarning.
     """
 
     name: str = "clt_k"
@@ -72,21 +84,31 @@ def compression_rate(cfg: CompressorConfig) -> float:
     return cfg.rate
 
 
+def resolve_backend_with_deprecation(cfg: CompressorConfig, spec="auto"):
+    """Resolve a backend spec, honouring the deprecated use_kernel flag.
+
+    The single home of the use_kernel -> pallas mapping (shared with
+    scalecom._resolve_cfg_backend): when the flag is set it warns and maps an
+    "auto"/None spec onto "pallas"; an explicit spec always wins.
+    """
+    from repro.backends import resolve_backend
+
+    if cfg.use_kernel:
+        warnings.warn(
+            "CompressorConfig.use_kernel is deprecated; set "
+            'ScaleComConfig(backend="pallas") (or pass backend= explicitly). '
+            "Mapping use_kernel=True onto the pallas backend.",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        if spec is None or spec == "auto":
+            spec = "pallas"
+    return resolve_backend(spec)
+
+
 # ---------------------------------------------------------------------------
 # index selection strategies (per flat tensor, worker-stacked ef: (n, size))
 # ---------------------------------------------------------------------------
-
-
-def _chunk_indices_of(ef_row: Array, cfg: CompressorConfig) -> Array:
-    if cfg.use_kernel:
-        # Imported lazily to keep core importable without kernels package.
-        from repro.kernels import ops as kops
-
-        if cfg.topm == 1:
-            return kops.chunk_argmax(ef_row, cfg.chunk)
-    if cfg.topm == 1:
-        return chunked.chunk_argmax(ef_row, cfg.chunk)
-    return chunked.chunk_topm_indices(ef_row, cfg.chunk, cfg.topm)
 
 
 def leader_pick(stacked: Array, leader: Array) -> Array:
@@ -103,24 +125,26 @@ def leader_pick(stacked: Array, leader: Array) -> Array:
     return jnp.sum(stacked * mask.reshape((n,) + (1,) * (stacked.ndim - 1)), axis=0)
 
 
-def _select_clt(ef: Array, t: Array, cfg: CompressorConfig) -> Array:
+def _select_clt(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
     """Leader (= t mod n) chunk-top-m indices: every worker computes its own
-    candidate index row; the leader's is broadcast via ``leader_pick``."""
+    candidate index row in one batched backend call; the leader's is
+    broadcast via ``leader_pick``."""
     n = ef.shape[0]
-    idx_all = jax.vmap(lambda e: _chunk_indices_of(e, cfg))(ef)
+    idx_all = backend.select_indices(ef, cfg.chunk, cfg.topm)
     return leader_pick(idx_all, jnp.mod(t, n))
 
 
-def _select_true(ef: Array, t: Array, cfg: CompressorConfig) -> Array:
+def _select_true(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
     """True top-k oracle: indices of the *averaged* EF gradient (dense comm)."""
     del t
-    return _chunk_indices_of(jnp.mean(ef, axis=0), cfg)
+    return backend.select_indices(jnp.mean(ef, axis=0), cfg.chunk, cfg.topm)
 
 
-def _select_random(ef: Array, t: Array, cfg: CompressorConfig) -> Array:
+def _select_random(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
     """Shared random index set, re-drawn each step from a counter-derived key."""
+    del backend
     key = jax.random.fold_in(jax.random.PRNGKey(0x5CA1EC0), t)
-    n_ch = chunked.num_chunks(ef.shape[-1], cfg.chunk)
+    n_ch = -(-ef.shape[-1] // cfg.chunk)
     if cfg.topm == 1:
         return jax.random.randint(key, (n_ch,), 0, cfg.chunk, dtype=jnp.int32)
     # sample without replacement per chunk via random values + top_k
@@ -136,6 +160,18 @@ _SHARED_INDEX_SELECTORS = {
 }
 
 COMPRESSORS = ("clt_k", "true_topk", "local_topk", "random_k", "none")
+
+
+def select_indices(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
+    """The chunked index-selection step of each compressor, backend-dispatched.
+
+    Shared-index compressors return the shared (n_chunks[, topm]) set;
+    local_topk returns per-worker (n, n_chunks[, topm]) sets. This is the
+    entry point ``scalecom_reduce``'s fused path shares with ``compress``.
+    """
+    if cfg.name == "local_topk":
+        return backend.select_indices(ef, cfg.chunk, cfg.topm)
+    return _SHARED_INDEX_SELECTORS[cfg.name](ef, t, cfg, backend)
 
 
 # ---------------------------------------------------------------------------
@@ -182,9 +218,12 @@ def _compress_exact(
 
 
 def compress(
-    ef: Array, t: Array, cfg: CompressorConfig
+    ef: Array, t: Array, cfg: CompressorConfig, backend=None
 ) -> Tuple[Array, Array, Array]:
     """Compress worker-stacked EF gradients ``ef`` (n, size) at step ``t``.
+
+    backend: a resolved ``repro.backends.KernelBackend``; None resolves
+    "auto" (or "pallas" under the deprecated cfg.use_kernel flag).
 
     Returns (values, indices, dense_mean):
       values:     (n, k)  per-worker entries at the shared index set
@@ -204,19 +243,16 @@ def compress(
     if cfg.exact:
         return _compress_exact(ef, t, cfg)
 
+    if backend is None:
+        backend = resolve_backend_with_deprecation(cfg)
+
+    idx = select_indices(ef, t, cfg, backend)
+    vals = backend.gather(ef, idx, cfg.chunk, cfg.topm)
     if cfg.name == "local_topk":
         # Every worker its own indices: gather semantics (gradient build-up).
-        idx_all = jax.vmap(lambda e: _chunk_indices_of(e, cfg))(ef)
-        vals = jax.vmap(lambda e, i: chunked.chunk_gather(e, i, cfg.chunk))(ef, idx_all)
-        dense_each = jax.vmap(
-            lambda v, i: chunked.chunk_scatter(v, i, cfg.chunk, size)
-        )(vals, idx_all)
-        return vals, idx_all, jnp.mean(dense_each, axis=0)
-
-    selector = _SHARED_INDEX_SELECTORS[cfg.name]
-    idx = selector(ef, t, cfg)
-    vals = jax.vmap(lambda e: chunked.chunk_gather(e, idx, cfg.chunk))(ef)
+        dense_each = backend.scatter(vals, idx, cfg.chunk, size, cfg.topm)
+        return vals, idx, jnp.mean(dense_each, axis=0)
     # Commutative reduce: mean over the worker axis touches only k values.
     vmean = jnp.mean(vals, axis=0)
-    dense = chunked.chunk_scatter(vmean, idx, cfg.chunk, size)
+    dense = backend.scatter(vmean, idx, cfg.chunk, size, cfg.topm)
     return vals, idx, dense

@@ -30,10 +30,22 @@ Two chunk layouts (ScaleComConfig.layout):
              identical to flat whenever the last dim is a chunk multiple
              (row-major order), and statistically identical otherwise.
 
+Kernel dispatch (ScaleComConfig.backend): every chunked op — selection,
+gather, scatter, and the fused Eq. 5 residue update — routes through a
+``repro.backends`` KernelBackend resolved per call ("auto" probes the
+SCALECOM_BACKEND env var, pallas importability and jax.default_backend()).
+On the pallas backend the per-tensor inner loop is three kernel launches
+(worker-stacked select, fused EF update, ĝ scatter) instead of the 7-pass
+jnp chain, in *both* layouts; on the jnp backend it is the bitwise reference
+chain. Trajectories agree across backends to fp32 tolerance
+(tests/test_backends.py).
+
 Hierarchical / grouped mode (DESIGN.md §5): with ``groups=G < n`` the inner
 n/G workers are dense-averaged first (fast intra-group ICI reduce) and CLT-k
 runs across the G groups (the slow inter-group link, e.g. the multi-pod DCN
 axis). The residue then lives per *group*: build the state with n_workers=G.
+See examples/multipod_groups.py for the 2-pod driver and the DCN-byte
+accounting against analysis/perfmodel.py.
 """
 
 from __future__ import annotations
@@ -46,7 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chunked
-from repro.core.compressors import CompressorConfig, compress
+from repro.core.compressors import (
+    CompressorConfig,
+    compress,
+    leader_pick,
+    resolve_backend_with_deprecation,
+    select_indices,
+)
 from repro.core.filter import lowpass_update
 from repro.core.rates import resolve_compressor
 from repro.core.state import CODECS, ScaleComState, codec_key, storage_shape
@@ -68,6 +86,11 @@ class ScaleComConfig:
     residue_dtype:  fp32 | bf16 | fp8 | fp8_ec (beyond-paper; lossy codecs
                     use stochastic rounding keyed from the step counter)
     layout:         flat (paper-faithful) | rowwise (layout-preserving)
+    backend:        kernel backend spec for the chunked hot-path ops:
+                    "auto" (default; SCALECOM_BACKEND env var, then pallas
+                    iff running on TPU, else jnp), "jnp", "pallas", or a
+                    KernelBackend instance. Resolved at trace time with
+                    call-time feature probes (repro.backends).
     groups:         ScaleCom worker granularity; None => every data rank is a
                     worker. G < n enables hierarchical mode.
     warmup_steps:   steps of dense reduction before compression kicks in
@@ -79,6 +102,7 @@ class ScaleComConfig:
     min_size: int = 2048
     residue_dtype: str = "fp32"
     layout: str = "flat"
+    backend: Any = "auto"
     groups: Optional[int] = None
     warmup_steps: int = 0
     # per-tensor compression-rate rules (paper §4 guidance); first match wins,
@@ -87,6 +111,11 @@ class ScaleComConfig:
 
     def n_workers(self, data_ranks: int) -> int:
         return self.groups if self.groups is not None else data_ranks
+
+
+def _resolve_cfg_backend(cfg: ScaleComConfig):
+    """cfg.backend -> KernelBackend, honouring the deprecated use_kernel flag."""
+    return resolve_backend_with_deprecation(cfg.compressor, cfg.backend)
 
 
 def _group_fold(g: Array, groups: int) -> Array:
@@ -104,20 +133,46 @@ def dense_reduce(grads_pw: Pytree) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# flat path (chunked, non-exact): the fused kernel route
+# ---------------------------------------------------------------------------
+
+
+def _reduce_flat_chunked(m, gf, comp, beta, t, backend):
+    """One tensor through Algorithm 1 on the flat layout, backend-fused.
+
+    m, gf: (G, size) fp32 decoded residue / folded gradients. Three backend
+    ops — worker-stacked index selection, fused EF residue update (Eq. 5),
+    and the ĝ densify scatter; on the pallas backend each is one kernel
+    launch (cf. the 7-pass unfused chain priced in bench_kernels.py).
+
+    Returns (ghat (size,), m_new (G, size), vals, idx).
+    """
+    size = gf.shape[-1]
+    ef = m + gf
+    idx = select_indices(ef, t, comp, backend)  # shared, or per-worker (local)
+    m_new, vals = backend.ef_update(m, gf, idx, beta, comp.chunk, comp.topm)
+    if comp.name == "local_topk":
+        # union-average (gradient build-up): every worker scatters its own set
+        ghat = jnp.mean(backend.scatter(vals, idx, comp.chunk, size, comp.topm), axis=0)
+    else:
+        vmean = jnp.mean(vals, axis=0)  # all-reduce of k values
+        ghat = backend.scatter(vmean, idx, comp.chunk, size, comp.topm)
+    return ghat, m_new, vals, idx
+
+
+# ---------------------------------------------------------------------------
 # rowwise path
 # ---------------------------------------------------------------------------
 
 
-def _rowwise_indices(efp: Array, t: Array, cfg: CompressorConfig) -> Array:
+def _rowwise_indices(efp: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
     """Shared (R, ncr) index set for the worker-stacked padded EF (G, R, Cp)."""
     G = efp.shape[0]
     if cfg.name == "clt_k":
-        from repro.core.compressors import leader_pick
-
-        idx_all = chunked.rw_argmax(efp, cfg.chunk)  # (G, *lead, ncr)
+        idx_all = backend.rw_select_indices(efp, cfg.chunk)  # (G, *lead, ncr)
         return leader_pick(idx_all, jnp.mod(t, G))
     if cfg.name == "true_topk":
-        return chunked.rw_argmax(jnp.mean(efp, axis=0), cfg.chunk)
+        return backend.rw_select_indices(jnp.mean(efp, axis=0), cfg.chunk)
     if cfg.name == "random_k":
         key = jax.random.fold_in(jax.random.PRNGKey(0x5CA1EC0), t)
         ncr = efp.shape[-1] // cfg.chunk
@@ -127,36 +182,50 @@ def _rowwise_indices(efp: Array, t: Array, cfg: CompressorConfig) -> Array:
     raise NotImplementedError(f"{cfg.name} has no rowwise path")
 
 
-def _reduce_rowwise(gw, enc, codec, shape, cfg, t, enc_key):
+def _reduce_rowwise(gw, enc, codec, shape, cfg, t, enc_key, backend):
     """One tensor through Algorithm 1 in the layout-preserving form.
 
     The residue/work arrays keep the parameter's full shape — no reshape
-    anywhere, so GSPMD never moves data; chunking runs along the last dim.
+    anywhere, so GSPMD never moves data; chunking runs along the last dim
+    through the backend's rw_* trailing-axis ops (kernels.rowwise on the
+    pallas backend): index selection + the fused EF update + the ĝ scatter,
+    mirroring the flat fused route.
     """
+    if cfg.compressor.topm != 1:
+        raise NotImplementedError(
+            "rowwise layout supports topm=1 only (chunked top-1 per row); "
+            "use layout='flat' for per-chunk top-m"
+        )
     G = gw.shape[0]
     st_shape = storage_shape(shape, "rowwise")
     g3 = gw.reshape((G,) + st_shape)  # no-op for rank>=1 params
     m = codec.decode(enc, st_shape)  # (G, *param_shape)
-    ef = m + g3
     chunk = cfg.compressor.chunk
-    efp = chunked.rw_pad(ef, chunk)
+    mp = chunked.rw_pad(m, chunk)
+    gp = chunked.rw_pad(g3, chunk)
+    efp = mp + gp  # zero padding is select-safe (see chunked.rw_pad)
     cp = efp.shape[-1]
+    C = g3.shape[-1]
 
     if cfg.compressor.name == "local_topk":
-        idx_all = chunked.rw_argmax(efp, chunk)
-        vals = chunked.rw_gather(efp, idx_all, chunk)
-        own = chunked.rw_scatter(vals, idx_all, chunk, cp)[..., : ef.shape[-1]]
+        idx = backend.rw_select_indices(efp, chunk)  # per-worker sets
+    else:
+        idx = _rowwise_indices(efp, t, cfg.compressor, backend)
+
+    # Fused Eq. 5: one pass emits both the residue update and the values each
+    # worker contributes to the k-value all-reduce.
+    m_new_p, vals = backend.rw_ef_update(mp, gp, idx, cfg.beta, chunk)
+    new_m = m_new_p[..., :C]
+
+    if cfg.compressor.name == "local_topk":
+        own = backend.rw_scatter(vals, idx, chunk, cp)[..., :C]
         ghat = jnp.mean(own, axis=0)
         k = int(np.prod(vals.shape[1:]))
     else:
-        idx = _rowwise_indices(efp, t, cfg.compressor)
-        vals = chunked.rw_gather(efp, idx, chunk)  # (G, R, ncr) via broadcast
         vmean = jnp.mean(vals, axis=0)  # all-reduce of k values
-        ghat = chunked.rw_scatter(vmean, idx, chunk, cp)[..., : ef.shape[-1]]
-        own = chunked.rw_scatter(vals, idx, chunk, cp)[..., : ef.shape[-1]]
+        ghat = backend.rw_scatter(vmean, idx, chunk, cp)[..., :C]
         k = int(np.prod(vmean.shape))
 
-    new_m = lowpass_update(m, g3, own, cfg.beta)
     new_enc = codec.encode(new_m, st_shape, key=enc_key)
     return ghat.reshape(shape), new_enc, k
 
@@ -180,6 +249,7 @@ def scalecom_reduce(
     shapes and is identical on every worker (it came out of an all-reduce).
     """
     codec = CODECS[cfg.residue_dtype]
+    backend = _resolve_cfg_backend(cfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads_pw)
     t = state.t
     new_residues = dict(state.residues)
@@ -219,7 +289,7 @@ def scalecom_reduce(
         if cfg.layout == "rowwise":
             ghat, new_enc, k = _reduce_rowwise(
                 gw, enc, codec, shape, dataclasses.replace(cfg, compressor=comp), t,
-                enc_key,
+                enc_key, backend,
             )
             new_residues[path] = new_enc
             ghat_leaves.append(ghat.astype(g.dtype))
@@ -232,29 +302,30 @@ def scalecom_reduce(
 
         gf = gw.reshape(G, size)
         m = codec.decode(enc, (size,))  # (G, size) fp32
-        ef = m + gf
-        vals, idx, ghat = compress(ef, t, comp)
-        # own contribution each worker actually sent (sparse at shared indices)
-        if comp.name == "local_topk":
-            own = jax.vmap(
-                lambda v, i: chunked.chunk_scatter(v, i, comp.chunk, size)
-            )(vals, idx)
-        elif comp.exact:
-            own = jax.vmap(
-                lambda v: jnp.zeros((size,), ef.dtype).at[idx].set(v, mode="drop")
-            )(vals)
+        if comp.exact:
+            # analysis-only dense top-k: stays on the unfused compress() path
+            ef = m + gf
+            vals, idx, ghat = compress(ef, t, comp, backend=backend)
+            if comp.name == "local_topk":
+                own = jax.vmap(
+                    lambda v, i: jnp.zeros((size,), ef.dtype).at[i].set(v, mode="drop")
+                )(vals, idx)
+            else:
+                own = jax.vmap(
+                    lambda v: jnp.zeros((size,), ef.dtype).at[idx].set(v, mode="drop")
+                )(vals)
+            new_m = lowpass_update(m, gf, own, cfg.beta)
         else:
-            own = jax.vmap(
-                lambda v: chunked.chunk_scatter(v, idx, comp.chunk, size)
-            )(vals)
-        new_m = lowpass_update(m, gf, own, cfg.beta)
+            ghat, new_m, vals, idx = _reduce_flat_chunked(
+                m, gf, comp, cfg.beta, t, backend
+            )
         new_residues[path] = codec.encode(new_m, (size,), key=enc_key)
         ghat_leaves.append(ghat.reshape(shape).astype(g.dtype))
 
         k = vals.shape[-1] if vals.ndim == 2 else int(np.prod(vals.shape[1:]))
         bytes_sent += 4.0 * k + 4.0 * np.prod(idx.shape)
         if compute_stats:
-            y = jnp.mean(ef, axis=0)
+            y = jnp.mean(m + gf, axis=0)
             sq_err = sq_err + jnp.sum((y - ghat) ** 2)
             sq_all = sq_all + jnp.sum(y**2)
 

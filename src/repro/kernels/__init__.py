@@ -1,6 +1,9 @@
 """Pallas TPU kernels for ScaleCom's compute hot spot (chunk-wise selection,
 Table 1: ~3 FLOPs/element) and the fused residue update.
 
-Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper with
-CPU interpret fallback), ref.py (pure-jnp oracle).
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd 1-D wrapper
+with CPU interpret fallback), ref.py (pure-jnp oracle), rowwise.py
+(trailing-axis wrappers for the layout-preserving path). Production dispatch
+goes through repro.backends (resolve_backend); tile geometry is swept by
+repro.backends.autotune and benchmarked in benchmarks/bench_kernels.py.
 """

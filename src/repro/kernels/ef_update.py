@@ -10,9 +10,22 @@ Unfused HLO runs 3+ passes over the gradient (add, gather, scatter, axpy) —
 each HBM-bandwidth bound. This kernel does one read of (m, g, idx) and one
 write of (m', vals) per tile: ~2.3x less HBM traffic for the residue update,
 which matters because the residue array is n_workers x P — the largest state
-in the system. Tiles are (BLOCK_CHUNKS, chunk) in VMEM like chunk_topk.
+in the system (measured sweep: benchmarks/bench_kernels.py). Tiles are
+(block_chunks, chunk) in VMEM like chunk_topk; ``block_chunks`` is autotuned
+by repro.backends.autotune.
 
-Validated against the pure-jnp oracle in tests/test_kernels.py.
+``beta`` is a *static* kernel parameter, closed over with functools.partial
+and folded into the tile arithmetic at compile time. (It used to be passed as
+a (1,) VMEM operand with a degenerate BlockSpec, which does not tile on real
+TPU — sub-(8,128) blocks of a 1-D operand have no legal layout; scalars
+belong in SMEM or, as here, in the kernel closure since beta is a per-run
+config constant.)
+
+Top-m per chunk (idx (n_chunks, m)) is fused the same way: m static one-hot
+accumulation passes, matching chunk_topk._scatter_kernel.
+
+Validated against the pure-jnp oracle in tests/test_kernels.py and, through
+the backend dispatch layer, tests/test_backends.py.
 """
 
 from __future__ import annotations
@@ -23,26 +36,72 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.chunk_topk import BLOCK_CHUNKS
+from repro.kernels.chunk_topk import BLOCK_CHUNKS, _flat_view, _pad_rows
 
 __all__ = ["ef_update_pallas"]
 
 
-def _ef_update_kernel(beta_ref, m_ref, g_ref, idx_ref, m_out_ref, val_ref):
-    beta = beta_ref[0]
+def _ef_update_kernel(m_ref, g_ref, idx_ref, m_out_ref, val_ref, *, beta: float):
     m = m_ref[...]
     g = g_ref[...]
     idx = idx_ref[...]
     ef = m + g
-    vals = jnp.take_along_axis(ef, idx[:, None], axis=-1)[:, 0]
-    # ghat_own = vals scattered at idx; m' = m + beta*(g - ghat_own)
     cols = jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
-    onehot = cols == idx[:, None]
-    m_out_ref[...] = m + beta * (g - jnp.where(onehot, ef, 0.0))
+    zero = jnp.zeros((), ef.dtype)
+    if idx.ndim == 1:
+        vals = jnp.take_along_axis(ef, idx[:, None], axis=-1)[:, 0]
+        own = jnp.where(cols == idx[:, None], ef, zero)
+    else:
+        vals = jnp.take_along_axis(ef, idx, axis=-1)
+        own = jnp.zeros(m.shape, ef.dtype)
+        for j in range(idx.shape[1]):  # top-m: selected offsets are distinct
+            own = own + jnp.where(cols == idx[:, j : j + 1], ef, zero)
+    # ghat_own = vals scattered at idx; m' = m + beta*(g - ghat_own)
+    m_out_ref[...] = m + beta * (g - own)
     val_ref[...] = vals
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def row_ef_update(m2d, g2d, idx, beta, *, interpret, block_chunks):
+    """(rows, chunk) m/g + per-row idx -> (m', vals); grid/padding here.
+
+    Shared by the flat wrapper below and kernels.rowwise.rw_ef_update_pallas.
+    """
+    n_rows, chunk = m2d.shape
+    mp = _pad_rows(m2d, block_chunks)
+    gp = _pad_rows(g2d, block_chunks)
+    idxp = _pad_rows(idx, block_chunks)
+    rows = mp.shape[0]
+    grid = rows // block_chunks
+    if idx.ndim == 1:
+        aux_block, val_shape = (block_chunks,), (rows,)
+        aux_map = lambda i: (i,)  # noqa: E731
+    else:
+        aux_block, val_shape = (block_chunks, idx.shape[1]), (rows, idx.shape[1])
+        aux_map = lambda i: (i, 0)  # noqa: E731
+    m_new, vals = pl.pallas_call(
+        functools.partial(_ef_update_kernel, beta=float(beta)),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_chunks, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((block_chunks, chunk), lambda i: (i, 0)),
+            pl.BlockSpec(aux_block, aux_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_chunks, chunk), lambda i: (i, 0)),
+            pl.BlockSpec(aux_block, aux_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, chunk), m2d.dtype),
+            jax.ShapeDtypeStruct(val_shape, m2d.dtype),
+        ],
+        interpret=interpret,
+    )(mp, gp, idxp)
+    return m_new[:n_rows], vals[:n_rows]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta", "chunk", "interpret", "block_chunks")
+)
 def ef_update_pallas(
     m: jnp.ndarray,
     g: jnp.ndarray,
@@ -51,42 +110,17 @@ def ef_update_pallas(
     chunk: int,
     *,
     interpret: bool = True,
+    block_chunks: int = BLOCK_CHUNKS,
 ):
-    """Fused residue update for one worker's flat tensors.
+    """Fused low-pass residue update for one worker's flat tensors.
 
-    m, g: (size,) fp32; idx: (n_chunks,) int32 shared indices.
-    Returns (m_new (size,), vals (n_chunks,)).
+    m, g: (size,) fp32; idx: (n_chunks,) or (n_chunks, m) int32 shared indices.
+    beta is static (baked into the kernel). Returns (m_new (size,), vals).
     """
     n = m.shape[-1]
-    n_chunks = -(-n // chunk)
-    pad = n_chunks * chunk - n
-    mp = jnp.pad(m.reshape(-1), (0, pad)).reshape(n_chunks, chunk)
-    gp = jnp.pad(g.reshape(-1), (0, pad)).reshape(n_chunks, chunk)
-    rpad = (-n_chunks) % BLOCK_CHUNKS
-    if rpad:
-        mp = jnp.pad(mp, ((0, rpad), (0, 0)))
-        gp = jnp.pad(gp, ((0, rpad), (0, 0)))
-    rows = mp.shape[0]
-    idxp = jnp.pad(idx, (0, rows - n_chunks))
-    grid = -(-rows // BLOCK_CHUNKS)
-    beta_arr = jnp.asarray([beta], jnp.float32)
-    m_new, vals = pl.pallas_call(
-        _ef_update_kernel,
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((1,), lambda i: (0,)),  # beta scalar, same block each step
-            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((BLOCK_CHUNKS, chunk), lambda i: (i, 0)),
-            pl.BlockSpec((BLOCK_CHUNKS,), lambda i: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((rows, chunk), m.dtype),
-            jax.ShapeDtypeStruct((rows,), m.dtype),
-        ],
-        interpret=interpret,
-    )(beta_arr, mp, gp, idxp)
-    return m_new.reshape(-1)[:n], vals[:n_chunks]
+    mp, n_chunks = _flat_view(m, chunk)
+    gp, _ = _flat_view(g, chunk)
+    m_new, vals = row_ef_update(
+        mp, gp, idx, beta, interpret=interpret, block_chunks=block_chunks
+    )
+    return m_new.reshape(-1)[:n], vals

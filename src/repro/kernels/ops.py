@@ -3,6 +3,11 @@
 On TPU (the target) the kernels compile natively; this container is CPU-only so
 ``interpret=True`` executes the kernel bodies in Python — bit-identical math,
 validated against repro.kernels.ref in the test suite.
+
+These are the thin 1-D convenience entry points. Production dispatch —
+jnp-vs-pallas selection, autotuned tile geometry, batched worker axes, and the
+rowwise layout — goes through ``repro.backends`` (resolve_backend), which is
+what ``scalecom_reduce`` uses.
 """
 
 from __future__ import annotations
@@ -12,7 +17,15 @@ import jax
 from repro.kernels import chunk_topk as _ct
 from repro.kernels import ef_update as _ef
 
-__all__ = ["chunk_argmax", "chunk_select", "chunk_gather", "ef_update", "on_tpu"]
+__all__ = [
+    "chunk_argmax",
+    "chunk_select",
+    "chunk_topm",
+    "chunk_gather",
+    "chunk_scatter",
+    "ef_update",
+    "on_tpu",
+]
 
 
 def on_tpu() -> bool:
@@ -25,12 +38,22 @@ def chunk_select(x, chunk: int):
 
 
 def chunk_argmax(x, chunk: int):
-    """Indices only (CompressorConfig.use_kernel entry point)."""
+    """Indices only (the CLT-k leader's selection pass)."""
     return _ct.chunk_argmax_pallas(x, chunk, interpret=not on_tpu())[0]
+
+
+def chunk_topm(x, chunk: int, topm: int):
+    """Per-chunk top-m (indices, values), each (n_chunks, topm)."""
+    return _ct.chunk_topm_pallas(x, chunk, topm, interpret=not on_tpu())
 
 
 def chunk_gather(x, idx, chunk: int):
     return _ct.chunk_gather_pallas(x, idx, chunk, interpret=not on_tpu())
+
+
+def chunk_scatter(vals, idx, chunk: int, size: int):
+    """Dense flat (size,) with per-chunk values at idx, zeros elsewhere."""
+    return _ct.chunk_scatter_pallas(vals, idx, chunk, size, interpret=not on_tpu())
 
 
 def ef_update(m, g, idx, beta: float, chunk: int):

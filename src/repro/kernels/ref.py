@@ -6,12 +6,19 @@ import jax.numpy as jnp
 
 from repro.core import chunked
 
-__all__ = ["chunk_argmax_ref", "chunk_gather_ref", "ef_update_ref"]
+__all__ = ["chunk_argmax_ref", "chunk_topm_ref", "chunk_gather_ref", "ef_update_ref"]
 
 
 def chunk_argmax_ref(x: jnp.ndarray, chunk: int):
     """(indices, values) per chunk — mirrors chunk_topk._argmax_kernel."""
     idx = chunked.chunk_argmax(x, chunk)
+    vals = chunked.chunk_gather(x, idx, chunk)
+    return idx, vals
+
+
+def chunk_topm_ref(x: jnp.ndarray, chunk: int, topm: int):
+    """(indices, values) per-chunk top-m — mirrors chunk_topk._topm_kernel."""
+    idx = chunked.chunk_topm_indices(x, chunk, topm)
     vals = chunked.chunk_gather(x, idx, chunk)
     return idx, vals
 

@@ -45,6 +45,13 @@ def main(argv=None):
     ap.add_argument("--residue-dtype", default="fp32",
                     choices=["fp32", "bf16", "fp8", "fp8_ec"])
     ap.add_argument("--groups", type=int, default=None)
+    ap.add_argument("--backend", default="auto", choices=["auto", "jnp", "pallas"],
+                    help="kernel backend for the chunked reduce ops "
+                         "(repro.backends; auto = env var > TPU probe > jnp)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep Pallas tile geometry for this model's tensor "
+                         "sizes and persist winners to the autotune cache "
+                         "before training (see repro.backends.autotune)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -67,6 +74,7 @@ def main(argv=None):
         min_size=1024,
         residue_dtype=args.residue_dtype,
         groups=args.groups,
+        backend=args.backend,
         warmup_steps=args.warmup_steps,
     )
     opt = make_optimizer(args.optimizer)
@@ -75,6 +83,18 @@ def main(argv=None):
     state, _ = init_train_state(
         model, opt, sc_cfg, jax.random.PRNGKey(args.seed), n_workers=args.workers
     )
+    if args.autotune and args.backend != "jnp":
+        from repro.backends import autotune as _at
+
+        wins = _at.autotune_params(
+            state.params, args.chunk, min_size=sc_cfg.min_size
+        )
+        for key, best in wins.items():
+            print(f"[launch.train] autotune {key}: block_chunks={best} "
+                  f"-> {_at.cache_path()}")
+    elif args.autotune:
+        print("[launch.train] --autotune skipped: backend=jnp never consults "
+              "the Pallas tile cache")
     loop = TrainLoop(
         model=model, optimizer=opt, schedule=sched, sc_cfg=sc_cfg,
         n_workers=args.workers, checkpoint_dir=args.checkpoint_dir,
