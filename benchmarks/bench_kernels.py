@@ -56,6 +56,33 @@ def _bench_backend(be, size: int) -> list[dict]:
     return out
 
 
+# rowwise (layout-preserving) geometry for the top-m sweep: chunks along the
+# native last dim of a worker-stacked 3-D tensor — the shapes the unified
+# trailing-axis launchers see in production.
+ROWWISE_SHAPE = (4, 64, 4096)  # (workers, rows, C); C % CHUNK == 0
+TOPMS = (1, 2, 4)
+
+
+def _bench_rowwise_topm(be) -> list[dict]:
+    g = jax.random.normal(jax.random.PRNGKey(2), ROWWISE_SHAPE)
+    m = jax.random.normal(jax.random.PRNGKey(3), ROWWISE_SHAPE)
+    size = g.size
+    out = []
+    for topm in TOPMS:
+        sel = jax.jit(lambda a: be.select(a, CHUNK, topm))
+        us = time_fn(sel, g)
+        out.append({"op": "select_rowwise", "backend": be.name, "size": size,
+                    "chunk": CHUNK, "topm": topm, "us_per_call": us,
+                    "elems_per_us": size / us})
+        idx = sel(jnp.mean(m + g, axis=0))[0]  # shared leader set
+        upd = jax.jit(lambda mm, gg, ii: be.ef_update(mm, gg, ii, 0.1, CHUNK, topm))
+        us = time_fn(upd, m, g, idx)
+        out.append({"op": "ef_update_rowwise", "backend": be.name, "size": size,
+                    "chunk": CHUNK, "topm": topm, "us_per_call": us,
+                    "elems_per_us": size / us})
+    return out
+
+
 def run() -> list[Row]:
     rows: list[Row] = []
     entries: list[dict] = []
@@ -74,6 +101,15 @@ def run() -> list[Row]:
                 rows.append(
                     (f"kernels/{e['op']}_{name}_n{size}", e["us_per_call"], derived)
                 )
+        for e in _bench_rowwise_topm(be):
+            entries.append(e)
+            rows.append(
+                (
+                    f"kernels/{e['op']}_{name}_topm{e['topm']}",
+                    e["us_per_call"],
+                    f"elems_per_us={e['elems_per_us']:.0f};rate={CHUNK // e['topm']}x",
+                )
+            )
 
     # cross-backend correctness probe on a tail-chunk size (the CI canary)
     ok = None

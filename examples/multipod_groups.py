@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.analysis.perfmodel import PerfConfig, _comm_bytes
 from repro.configs import registry
+from repro.core.plan import payload_bytes
 from repro.core.compressors import CompressorConfig
 from repro.core.scalecom import ScaleComConfig
 from repro.data import make_batches
@@ -44,8 +45,10 @@ STEPS, WARMUP = 24, 4
 
 def _payload_prediction(params) -> tuple[float, float, float]:
     """(k_values, bytes_up, bytes_dense) per step from the parameter shapes —
-    the same accounting scalecom_reduce's stats use (values + int32 indices
-    for tensors >= MIN_SIZE, dense fp32 below)."""
+    the same one-rule accounting scalecom_reduce's plan stage uses
+    (core.plan.payload_bytes: 4B per value each pod, the leader's 4B-per-index
+    broadcast amortized over the pods; dense fp32 below MIN_SIZE)."""
+    comp = CompressorConfig("clt_k", chunk=CHUNK)
     k = up = dense = 0.0
     for leaf in jax.tree.leaves(params):
         size = int(np.prod(leaf.shape)) if leaf.ndim else 1
@@ -55,7 +58,7 @@ def _payload_prediction(params) -> tuple[float, float, float]:
         else:
             n_chunks = math.ceil(size / CHUNK)
             k += n_chunks
-            up += 8.0 * n_chunks  # 4B value + 4B index per chunk
+            up += payload_bytes(comp, n_chunks, POD_COUNT)
     return k, up, dense
 
 
@@ -95,15 +98,16 @@ def main() -> None:
     np.testing.assert_allclose(meas_up, pred_up, rtol=1e-6)
     np.testing.assert_allclose(meas_dense, pred_dense, rtol=1e-6)
 
-    # Full DCN round trip per pod: up (k values + k indices) + down (k reduced
-    # values) vs the dense scheme's gradient up + gradient down. Compare the
-    # measured reduction with the Appendix-F model's byte formulas at the same
-    # (params, rate, workers) point — they must agree to tail-chunk rounding.
-    meas_ratio = (2 * meas_dense) / (meas_up + 4.0 * k)
+    # Full DCN round trip per pod: up (the plan's transmit payload) + down
+    # (k reduced values + the received k-index broadcast) vs the dense
+    # scheme's gradient up + gradient down. Compare the measured reduction
+    # with the Appendix-F model's byte formulas at the same (params, rate,
+    # workers) point — they must agree to tail-chunk rounding.
+    meas_ratio = (2 * meas_dense) / (meas_up + 8.0 * k)
     P = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(state.params))
     pm = PerfConfig(params=P, compression=CHUNK, workers=POD_COUNT, topology="ps")
     pred_ratio = _comm_bytes(pm, "none") / _comm_bytes(pm, "scalecom")
-    print(f"per-pod DCN bytes/step: scalecom={meas_up + 4 * k:,.0f} "
+    print(f"per-pod DCN bytes/step: scalecom={meas_up + 8 * k:,.0f} "
           f"dense={2 * meas_dense:,.0f}")
     print(f"DCN-byte reduction: measured {meas_ratio:.1f}x, "
           f"perfmodel predicts {pred_ratio:.1f}x")

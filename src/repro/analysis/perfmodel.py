@@ -12,8 +12,11 @@ with gradient payloads:
                 bottleneck)
   local_topk  : each worker sends k values+indices, but the *reduced* set is
                 the union: the server returns ~min(n*k, G) — O(n) build-up
-  scalecom    : k values+indices up, k values down + k indices broadcast once
-                — O(1) in n (CLT-k commutes with the reduction)
+  scalecom    : up, k values per worker + ONE k-index leader broadcast
+                (amortized 1/n per worker on the send side — the
+                core.plan.payload_bytes transmit rule); down, k reduced
+                values + the received k-index broadcast — O(1) in n (CLT-k
+                commutes with the reduction)
 
 Numbers reproduce the paper's qualitative claims: local top-k speedup decays
 from ~1.9x to ~1.2x as n grows 8->128 while ScaleCom holds ~2x (Fig. 6b /
@@ -57,9 +60,12 @@ def _comm_bytes(cfg: PerfConfig, scheme: str) -> float:
         down = min(n * (kb + idx), G)
         return (kb + idx) + down
     if scheme == "scalecom":
-        # up: k values (+ index broadcast from the leader, amortized once);
-        # down: k reduced values. O(1) in n.
-        return (kb + idx) + kb
+        # up (send): k values per worker + the LEADER's k-index broadcast
+        # amortized over the n workers (only the leader ships indices — the
+        # core.plan.payload_bytes transmit rule); down (receive): k reduced
+        # values + the k-index broadcast every worker receives (same
+        # send/receive convention as the local_topk down-leg). O(1) in n.
+        return (kb + idx / n) + (kb + idx)
     raise ValueError(scheme)
 
 
@@ -77,7 +83,9 @@ def _server_bytes(cfg: PerfConfig, scheme: str) -> float:
         down = n * min(n * 2 * k * GRAD_BYTES, G)
         return up + down
     if scheme == "scalecom":
-        return n * 2 * k * GRAD_BYTES + n * k * GRAD_BYTES
+        # receives n x k values + the leader's k indices; sends each of the
+        # n workers k reduced values + the k-index broadcast
+        return n * k * GRAD_BYTES + k * GRAD_BYTES + n * 2 * k * GRAD_BYTES
     raise ValueError(scheme)
 
 

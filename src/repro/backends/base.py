@@ -10,28 +10,32 @@ selected per run by ``resolve_backend``.
 
 Protocol
 --------
-A backend implements three *primitive* trailing-axis ops; everything else has
-a default composition in this base class:
+ONE trailing-axis op set. A backend implements three *primitive* ops;
+everything else has a default composition in this base class:
 
-  select_indices(x, chunk, topm) -> per-chunk magnitude top-m offsets
-  gather(x, idx, chunk)          -> values at per-chunk offsets
-  scatter(vals, idx, chunk, size)-> dense array from (offset, value) pairs
+  select_indices(x, chunk, topm)        -> per-chunk magnitude top-m offsets
+  gather(x, idx, chunk, topm)           -> values at per-chunk offsets
+  scatter(vals, idx, chunk, size, topm) -> dense array from (offset, value)
 
-All ops are batch-aware: ``x`` is (..., n) and the last axis is the chunked
-buffer, so a worker-stacked (n_workers, size) tensor is one call (and, on the
-Pallas backend, one kernel launch) — callers never vmap a backend op. Derived
-ops that backends override for fusion:
+All ops chunk the LAST axis of an arbitrarily-batched array, so every shape
+the reduce dispatches is one call (and, on the Pallas backend, one kernel
+launch): a flat 1-D buffer, a worker-stacked (n_workers, size) tensor, and a
+layout-preserving (n_workers, *param_shape) tensor are the same op — flat is
+the degenerate single-row case of the trailing-axis form
+((G, size) ≡ (G, 1, size)). Callers never vmap a backend op, and there are no
+per-layout op variants: a feature implemented against this surface lands in
+both layouts at once. Backends handle trailing-axis padding internally (zero
+padding is select-safe — core.chunked.pad_to_chunks).
 
-  select(x, chunk, topm)            -> (idx, vals) in one pass
-  ef_update(m, g, idx, beta, chunk) -> (m', vals): the fused Eq. 5 residue
-                                       update (ef=m+g, gather, scatter, axpy
-                                       in one read/write per tile)
+Derived ops that backends override for fusion:
 
-plus the ``rw_*`` rowwise variants operating on a pre-padded trailing axis
-(Cp % chunk == 0, see core.chunked rw_* docs). The base class forwards them
-to the flat ops — which is always sound because the rowwise contract
-guarantees the trailing dim is already a chunk multiple — so a minimal
-backend is exactly {select_indices, gather, scatter}.
+  select(x, chunk, topm)                  -> (idx, vals) in one pass
+  ef_update(m, g, idx, beta, chunk, topm) -> (m', vals): the fused Eq. 5
+                                             residue update (ef=m+g, gather,
+                                             scatter, axpy in one read/write
+                                             per tile)
+
+so a minimal backend is exactly {select_indices, gather, scatter}.
 
 Resolution
 ----------
@@ -130,26 +134,6 @@ class KernelBackend:
         vals = self.gather(ef, idx, chunk, topm)
         own = self.scatter(vals, idx, chunk, m.shape[-1], topm)
         return m + beta * (g - own), vals
-
-    # -- rowwise (layout-preserving) variants ------------------------------
-    #
-    # Trailing axis is pre-padded to a chunk multiple by the caller
-    # (core.chunked.rw_pad), so the flat ops apply verbatim; backends with
-    # genuinely different rowwise kernels override these.
-
-    def rw_select_indices(self, x: Array, chunk: int) -> Array:
-        return self.select_indices(x, chunk, 1)
-
-    def rw_gather(self, x: Array, idx: Array, chunk: int) -> Array:
-        return self.gather(x, idx, chunk)
-
-    def rw_scatter(self, vals: Array, idx: Array, chunk: int, cp: int) -> Array:
-        return self.scatter(vals, idx, chunk, cp)  # rowwise is top-1 only
-
-    def rw_ef_update(
-        self, m: Array, g: Array, idx: Array, beta: float, chunk: int
-    ) -> Tuple[Array, Array]:
-        return self.ef_update(m, g, idx, beta, chunk)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<KernelBackend {self.name}>"

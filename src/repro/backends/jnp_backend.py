@@ -1,10 +1,9 @@
 """Pure-jnp kernel backend: the reference implementation and the CPU path.
 
-Wraps the chunked-op oracles in ``repro.core.chunked``. The flat (arbitrary
-trailing size) ops pad the last axis and run the rw_* trailing-axis forms —
-for 1-D inputs that is literally the same computation as the classic
-chunk_argmax/chunk_gather/chunk_scatter, and for worker-stacked inputs it
-is their vmap, expressed as plain broadcasting so XLA sees one fused loop.
+A thin veneer over the trailing-axis chunked-op oracles in
+``repro.core.chunked`` — those ops are already batch-aware (a worker-stacked
+tensor is plain broadcasting, so XLA sees one fused loop, never a vmap) and
+pad the trailing axis internally, so each backend method is a single call.
 
 This backend is bitwise-deterministic against the Pallas backend in interpret
 mode (asserted by tests/test_backends.py) and is what "auto" resolves to
@@ -15,7 +14,6 @@ from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 
 from repro.backends.base import KernelBackend, register_backend
@@ -30,41 +28,17 @@ class JnpBackend(KernelBackend):
     name = "jnp"
 
     def select_indices(self, x: Array, chunk: int, topm: int = 1) -> Array:
-        xp = chunked.rw_pad(x, chunk)
         if topm == 1:
-            return chunked.rw_argmax(xp, chunk)
-        c = chunked.rw_view(xp, chunk)
-        _, idx = jax.lax.top_k(jnp.abs(c), topm)
-        return idx.astype(jnp.int32)
+            return chunked.chunk_argmax(x, chunk)
+        return chunked.chunk_topm_indices(x, chunk, topm)
 
     def gather(self, x: Array, idx: Array, chunk: int, topm: int = 1) -> Array:
-        xp = chunked.rw_pad(x, chunk)
-        if topm == 1:  # idx ends in (..., n_chunks)
-            return chunked.rw_gather(xp, idx, chunk)
-        # top-m: mask-sum per kept entry (same int32-safety rationale as
-        # chunked.chunk_gather — no row iota over n_chunks).
-        c = chunked.rw_view(xp, chunk)
-        cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
-        outs = [
-            jnp.sum(
-                jnp.where(cols == idx[..., j, None], c, jnp.zeros((), c.dtype)),
-                axis=-1,
-            )
-            for j in range(idx.shape[-1])
-        ]
-        return jnp.stack(outs, axis=-1)
+        return chunked.chunk_gather(x, idx, chunk, topm)
 
     def scatter(
         self, vals: Array, idx: Array, chunk: int, size: int, topm: int = 1
     ) -> Array:
-        cp = chunked.num_chunks(size, chunk) * chunk
-        if topm > 1:
-            out = None
-            for j in range(topm):  # top-m: m is small and static
-                z = chunked.rw_scatter(vals[..., j], idx[..., j], chunk, cp)
-                out = z if out is None else out + z
-            return out[..., :size]
-        return chunked.rw_scatter(vals, idx, chunk, cp)[..., :size]
+        return chunked.chunk_scatter(vals, idx, chunk, size, topm)
 
     # ef_update / select: base-class compositions (the unfused 7-pass chain
     # the Pallas backend's fusion is benchmarked against).

@@ -1,7 +1,7 @@
 """Pallas kernel backend: the fused TPU hot path.
 
 Routes every chunked op of the reduce through the Pallas kernels
-(repro.kernels.{chunk_topk, ef_update, rowwise}), turning the flat-layout
+(repro.kernels.{chunk_topk, ef_update, rowwise}), turning the per-tensor
 inner loop from the 7-pass jnp chain (add, argmax, gather, mean-prep,
 scatter, scatter, axpy) into
 
@@ -12,9 +12,11 @@ scatter, scatter, axpy) into
                                 measured sweep in benchmarks/bench_kernels.py)
     1 launch  scatter         — densify the k reduced values into ĝ
 
-and the rowwise (layout-preserving) path into the same three launches via the
-trailing-axis wrappers in kernels.rowwise — the first kernel path that layout
-has ever had.
+in *both* layouts: every op goes through the trailing-axis wrappers in
+kernels.rowwise (kernels.chunk_topk row launchers underneath), so a flat
+1-D buffer and a layout-preserving (n_workers, *param_shape) tensor take
+the identical code path — the backend pads the trailing axis to a chunk
+multiple here and slices dense outputs back.
 
 Execution mode is a call-time probe (compat-layer style): native lowering
 when jax.default_backend() == "tpu", interpret mode elsewhere (bit-identical
@@ -70,33 +72,24 @@ class PallasBackend(KernelBackend):
             n_chunks *= d
         return autotune.best_block_chunks(op, n_chunks, chunk, x.dtype)
 
-    # -- flat (trailing-axis buffer, batch-aware) --------------------------
-
     def select_indices(self, x: Array, chunk: int, topm: int = 1) -> Array:
         return self.select(x, chunk, topm)[0]
 
     def select(self, x: Array, chunk: int, topm: int = 1):
-        from repro.kernels import chunk_topk, rowwise
+        from repro.kernels import rowwise
 
-        kw = dict(
-            interpret=self._interp(), block_chunks=self._block("select", x, chunk)
+        return rowwise.select_trailing(
+            _padded(x, chunk), chunk, topm, interpret=self._interp(),
+            block_chunks=self._block("select", x, chunk),
         )
-        if x.ndim == 1:
-            if topm == 1:
-                return chunk_topk.chunk_argmax_pallas(x, chunk, **kw)
-            return chunk_topk.chunk_topm_pallas(x, chunk, topm, **kw)
-        return rowwise.rw_select_pallas(_padded(x, chunk), chunk, topm, **kw)
 
     def gather(self, x: Array, idx: Array, chunk: int, topm: int = 1) -> Array:
-        from repro.kernels import chunk_topk, rowwise
+        from repro.kernels import rowwise
 
-        kw = dict(
-            interpret=self._interp(), block_chunks=self._block("select", x, chunk)
+        return rowwise.gather_trailing(
+            _padded(x, chunk), idx, chunk, topm, interpret=self._interp(),
+            block_chunks=self._block("select", x, chunk),
         )
-        if x.ndim == 1:
-            return chunk_topk.chunk_gather_pallas(x, idx, chunk, **kw)
-        idx = _explicit_topm(idx, x.shape[:-1], topm)
-        return rowwise.rw_gather_pallas(_padded(x, chunk), idx, chunk, **kw)
 
     def scatter(
         self, vals: Array, idx: Array, chunk: int, size: int, topm: int = 1
@@ -104,14 +97,18 @@ class PallasBackend(KernelBackend):
         from repro.kernels import rowwise
 
         n_chunks = -(-size // chunk)
-        kw = dict(
+        # autotune key: TOTAL launch rows incl. broadcast leading dims,
+        # matching _block's convention for the other ops
+        tail = 1 if topm == 1 else 2
+        rows = n_chunks
+        for d in jnp.broadcast_shapes(idx.shape[:-tail], vals.shape[:-tail]):
+            rows *= d
+        out = rowwise.scatter_trailing(
+            vals, idx, chunk, n_chunks * chunk, topm=topm,
             interpret=self._interp(),
             block_chunks=autotune.best_block_chunks(
-                "select", n_chunks, chunk, vals.dtype
+                "select", rows, chunk, vals.dtype
             ),
-        )
-        out = rowwise.rw_scatter_pallas(
-            vals, idx, chunk, n_chunks * chunk, topm=topm, **kw
         )
         return out[..., :size]
 
@@ -119,76 +116,22 @@ class PallasBackend(KernelBackend):
         self, m: Array, g: Array, idx: Array, beta: float, chunk: int,
         topm: int = 1,
     ):
-        from repro.kernels import ef_update, rowwise
+        from repro.kernels import rowwise
 
-        kw = dict(
+        n = m.shape[-1]
+        m_new, vals = rowwise.ef_update_trailing(
+            _padded(m, chunk), _padded(g, chunk), idx, beta, chunk, topm,
             interpret=self._interp(),
             block_chunks=self._block("ef_update", m, chunk),
         )
-        if m.ndim == 1:
-            return ef_update.ef_update_pallas(m, g, idx, beta, chunk, **kw)
-        n = m.shape[-1]
-        idx = _explicit_topm(idx, m.shape[:-1], topm)
-        m_new, vals = rowwise.rw_ef_update_pallas(
-            _padded(m, chunk), _padded(g, chunk), idx, beta, chunk, **kw
-        )
         return m_new[..., :n], vals
-
-    # -- rowwise: inputs arrive pre-padded; same kernels, no pad/slice ------
-
-    def rw_select_indices(self, x: Array, chunk: int) -> Array:
-        from repro.kernels import rowwise
-
-        return rowwise.rw_select_pallas(
-            x, chunk, interpret=self._interp(),
-            block_chunks=self._block("select", x, chunk),
-        )[0]
-
-    def rw_gather(self, x: Array, idx: Array, chunk: int) -> Array:
-        from repro.kernels import rowwise
-
-        return rowwise.rw_gather_pallas(
-            x, idx, chunk, interpret=self._interp(),
-            block_chunks=self._block("select", x, chunk),
-        )
-
-    def rw_scatter(self, vals: Array, idx: Array, chunk: int, cp: int) -> Array:
-        from repro.kernels import rowwise
-
-        n_chunks = cp // chunk
-        return rowwise.rw_scatter_pallas(
-            vals, idx, chunk, cp, interpret=self._interp(),
-            block_chunks=autotune.best_block_chunks(
-                "select", n_chunks, chunk, vals.dtype
-            ),
-        )
-
-    def rw_ef_update(self, m: Array, g: Array, idx: Array, beta: float, chunk: int):
-        from repro.kernels import rowwise
-
-        return rowwise.rw_ef_update_pallas(
-            m, g, idx, beta, chunk, interpret=self._interp(),
-            block_chunks=self._block("ef_update", m, chunk),
-        )
 
 
 def _padded(x: Array, chunk: int) -> Array:
-    """Pad the trailing axis to a chunk multiple (rowwise-kernel contract)."""
+    """Pad the trailing axis to a chunk multiple (trailing-kernel contract)."""
     from repro.core import chunked
 
-    return chunked.rw_pad(x, chunk)
-
-
-def _explicit_topm(idx: Array, lead, topm: int) -> Array:
-    """Broadcast a shared top-m index set over the leading (worker) dims.
-
-    The rowwise kernels infer the top-m tail from idx.ndim vs data.ndim, which
-    is ambiguous when a *shared* (n_chunks, topm) set meets batched data of the
-    same rank — make the leading dims explicit so the tail reads as top-m.
-    """
-    if topm > 1 and idx.ndim <= len(lead) + 1:
-        idx = jnp.broadcast_to(idx, tuple(lead) + idx.shape[-2:])
-    return idx
+    return chunked.pad_to_chunks(x, chunk)
 
 
 @functools.lru_cache(maxsize=4)

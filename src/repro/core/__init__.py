@@ -1,10 +1,14 @@
 """ScaleCom core: the paper's contribution as composable JAX modules.
 
-- chunked:     chunk-wise selection primitives (the production "chunk-wise sort")
+- chunked:     trailing-axis chunk-wise selection primitives (the production
+               "chunk-wise sort"; one op set for both layouts)
 - compressors: CLT-k + baselines (true top-k, local top-k, random-k, none)
 - filter:      low-pass filtered residue update (Eq. 5) + Theorem-1 beta band
-- state:       per-worker residue state + fp32/bf16/fp8 codecs
-- scalecom:    Algorithm 1 as a worker-axis gradient reduce (GSPMD-native)
+- state:       per-worker residue state + fp32/bf16/fp8 codecs + layout probe
+- plan:        per-tensor reduce planning (rates/layout/shapes/byte rule),
+               cached per tree structure
+- scalecom:    Algorithm 1 as a worker-axis gradient reduce (GSPMD-native),
+               one layout-agnostic execute stage over the plan
 - metrics:     similarity/contraction diagnostics (Figs. 2-3, Appendix A)
 """
 

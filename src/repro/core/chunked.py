@@ -1,21 +1,35 @@
-"""Chunked sparsification primitives.
+"""Chunked sparsification primitives — ONE trailing-axis op set.
 
 ScaleCom's production implementation (paper §4, Appendix E) selects gradients
-*chunk-wise*: the flat gradient buffer is divided into chunks of C elements and the
-top-m (typically m=1) largest-magnitude entries of each chunk are kept, giving a
-compression rate of C/m. This is the "~3 FLOPs/element chunk-wise sort" of Table 1
-(their MNIST demo uses chunk_size=4, num_send=1).
+*chunk-wise*: a buffer is divided into chunks of C elements and the top-m
+(typically m=1) largest-magnitude entries of each chunk are kept, giving a
+compression rate of C/m. This is the "~3 FLOPs/element chunk-wise sort" of
+Table 1 (their MNIST demo uses chunk_size=4, num_send=1).
 
-On TPU the chunked formulation is the natural one: per-chunk arg-max reductions map
-onto VPU lane reductions over VMEM tiles with no data-dependent control flow
-(see repro.kernels.chunk_topk for the Pallas kernel; these jnp versions are the
-oracles and the CPU execution path).
+Every op here chunks the LAST axis of an arbitrarily-batched array:
 
-All functions operate on *flattened* arrays. Leading worker axes are handled by the
-callers with vmap.
+    x: (..., n)  ->  per-chunk results over (..., n_chunks[, topm])
+
+so one function covers every shape the reduce dispatches — a flat 1-D buffer
+(the paper-faithful layout), a worker-stacked (n_workers, size) tensor, and a
+layout-preserving (n_workers, *param_shape) tensor whose native last dim is
+the chunk axis are all the *same call*. Flat is simply the degenerate
+single-row case of the trailing-axis form ((G, size) ≡ (G, 1, size)); callers
+never vmap a chunked op.
+
+On TPU the chunked formulation is the natural one: per-chunk arg-max
+reductions map onto VPU lane reductions over VMEM tiles with no
+data-dependent control flow (see repro.kernels for the Pallas kernels; these
+jnp versions are the oracles and the CPU execution path).
+
+Padding is handled here: the trailing axis is zero-padded up to a chunk
+multiple, which is select-safe (see ``pad_to_chunks``), and ``chunk_scatter``
+slices the result back to the requested trailing size.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +42,6 @@ __all__ = [
     "chunk_topm_indices",
     "chunk_gather",
     "chunk_scatter",
-    "unchunk",
 ]
 
 
@@ -38,11 +51,11 @@ def num_chunks(n: int, chunk: int) -> int:
 
 
 def pad_to_chunks(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Zero-pad a flat array so its size is a multiple of ``chunk``.
+    """Zero-pad the trailing axis so its size is a multiple of ``chunk``.
 
-    Zero padding is safe for magnitude selection: a padded lane can only win the
-    arg-max if the entire chunk is exactly zero, in which case the selected value
-    is 0 and the scatter writes 0 — a no-op.
+    Zero padding is safe for magnitude selection: a padded lane can only win
+    the arg-max if the entire chunk is exactly zero, in which case the
+    selected value is 0 and the scatter writes 0 — a no-op.
     """
     n = x.shape[-1]
     pad = (-n) % chunk
@@ -53,13 +66,13 @@ def pad_to_chunks(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
 
 
 def chunk_view(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Reshape a flat (n,) array into (n_chunks, chunk), zero-padding the tail."""
-    xp = pad_to_chunks(x.reshape(-1), chunk)
-    return xp.reshape(-1, chunk)
+    """(..., n) -> (..., n_chunks, chunk), zero-padding the trailing axis."""
+    xp = pad_to_chunks(x, chunk)
+    return xp.reshape(xp.shape[:-1] + (xp.shape[-1] // chunk, chunk))
 
 
 def chunk_argmax(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Per-chunk magnitude arg-max of a flat array. Returns (n_chunks,) int32.
+    """Per-chunk magnitude arg-max. (..., n) -> (..., n_chunks) int32.
 
     This is the m=1 special case of chunk-wise top-m and the index-generation
     step CLT-k's leader runs every iteration.
@@ -69,118 +82,78 @@ def chunk_argmax(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
 
 
 def chunk_topm_indices(x: jnp.ndarray, chunk: int, m: int) -> jnp.ndarray:
-    """Per-chunk top-m magnitude indices. Returns (n_chunks, m) int32.
+    """Per-chunk top-m magnitude indices. (..., n) -> (..., n_chunks, m) int32.
 
     m > 1 lowers the compression rate to chunk/m; used by the per-layer
-    compression-rate guidance (paper §4) where sensitive layers get milder rates.
+    compression-rate guidance (paper §4) where sensitive layers get milder
+    rates. Ordered by descending magnitude, ties to the lower offset
+    (matching jax.lax.top_k).
     """
     c = chunk_view(x, chunk)
     _, idx = jax.lax.top_k(jnp.abs(c), m)
     return idx.astype(jnp.int32)
 
 
-def chunk_gather(x: jnp.ndarray, idx: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Gather per-chunk values at ``idx``.
-
-    idx: (n_chunks,) or (n_chunks, m). Returns values with the same shape as idx.
-    Uses a lane-iota mask-sum instead of take_along_axis for the same int32
-    reason as chunk_scatter (row iotas overflow on >2^31-element tensors).
-    """
-    c = chunk_view(x, chunk)
-    cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, 1)
-    if idx.ndim == 1:
-        return jnp.sum(
-            jnp.where(cols == idx[:, None], c, jnp.zeros((), c.dtype)), axis=-1
-        )
-    outs = [
-        jnp.sum(jnp.where(cols == idx[:, j : j + 1], c, jnp.zeros((), c.dtype)), -1)
-        for j in range(idx.shape[1])
-    ]
-    return jnp.stack(outs, axis=-1)
-
-
-def chunk_scatter(
-    vals: jnp.ndarray, idx: jnp.ndarray, chunk: int, size: int
-) -> jnp.ndarray:
-    """Scatter per-chunk values back into a dense flat (size,) array of zeros.
-
-    Implemented as a lane-iota compare (one-hot multiply) rather than
-    put_along_axis: scatter row indices are an iota over n_chunks, which
-    overflows int32 for >2^31-element tensors (61-layer-stacked MoE experts);
-    the lane iota only holds values < chunk. This is also exactly the form the
-    Pallas ef_update kernel uses on TPU.
-    """
-    n_ch = num_chunks(size, chunk)
-    cols = jax.lax.broadcasted_iota(jnp.int32, (n_ch, chunk), 1)
-    if idx.ndim == 1:
-        z = jnp.where(cols == idx[:, None], vals[:, None], jnp.zeros((), vals.dtype))
-    else:
-        z = jnp.zeros((n_ch, chunk), vals.dtype)
-        for j in range(idx.shape[1]):  # top-m: m is small and static
-            z = z + jnp.where(
-                cols == idx[:, j : j + 1],
-                vals[:, j : j + 1],
-                jnp.zeros((), vals.dtype),
-            )
-    return z.reshape(-1)[:size]
-
-
-def unchunk(c: jnp.ndarray, size: int) -> jnp.ndarray:
-    """Inverse of chunk_view: (n_chunks, chunk) -> (size,)."""
-    return c.reshape(-1)[:size]
-
-
-# ---------------------------------------------------------------------------
-# Row-wise (layout-preserving) chunk ops — beyond-paper TPU optimization.
-#
-# Flattening a (.., R, C) tensor whose last dim is model-sharded to 1D forces
-# GSPMD to re-shard (the row-major interleaving of shards is inexpressible on
-# one axis) — observed as multi-GB all-gathers around the compression step.
-# These variants chunk along the *last dim in place*: indices, gathers,
-# scatters and the residue all stay in the parameter's native sharding; the
-# only collective left is the k-value mean over the worker axis.
-#
-# All functions take x of shape (..., R, Cp) with Cp % chunk == 0 (callers pad
-# the last dim once) and operate on the trailing axis.
-# ---------------------------------------------------------------------------
-
-
-def rw_pad(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Pad the last dim to a multiple of ``chunk`` (zero padding is select-safe)."""
-    pad = (-x.shape[-1]) % chunk
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
-    return jnp.pad(x, widths)
-
-
-def rw_view(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """(..., Cp) -> (..., Cp/chunk, chunk)."""
-    return x.reshape(x.shape[:-1] + (x.shape[-1] // chunk, chunk))
-
-
-def rw_argmax(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Per-chunk magnitude arg-max along the last dim. (..., Cp) -> (..., Cp/chunk)."""
-    c = rw_view(x, chunk)
-    return jnp.argmax(jnp.abs(c), axis=-1).astype(jnp.int32)
-
-
-def rw_gather(x: jnp.ndarray, idx: jnp.ndarray, chunk: int) -> jnp.ndarray:
-    """Values at per-chunk offsets. x: (..., Cp); idx: (..., Cp/chunk)."""
-    c = rw_view(x, chunk)
+def _gather_one(c: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """c: (..., n_chunks, chunk); idx: broadcastable (..., n_chunks)."""
     cols = jax.lax.broadcasted_iota(jnp.int32, c.shape, c.ndim - 1)
     return jnp.sum(
         jnp.where(cols == idx[..., None], c, jnp.zeros((), c.dtype)), axis=-1
     )
 
 
-def rw_scatter(vals: jnp.ndarray, idx: jnp.ndarray, chunk: int, cp: int) -> jnp.ndarray:
-    """Dense (..., Cp) with per-chunk values at ``idx``, zeros elsewhere.
+def chunk_gather(
+    x: jnp.ndarray, idx: jnp.ndarray, chunk: int, topm: Optional[int] = None
+) -> jnp.ndarray:
+    """Values of (..., n) ``x`` at per-chunk offsets ``idx``.
 
-    vals and idx broadcast against each other (shared leader idx vs per-worker
-    vals); the output shape follows the broadcasted result.
+    idx broadcasts against x's leading dims (shared leader indices vs
+    per-worker data) and ends in (..., n_chunks) or, for top-m,
+    (..., n_chunks, topm). ``topm=None`` infers a top-m tail from
+    idx.ndim > x.ndim — ambiguous when a *shared* (n_chunks, topm) set meets
+    batched data of the same rank, so pass ``topm`` explicitly then.
+
+    Uses a lane-iota mask-sum instead of take_along_axis for the same int32
+    reason as chunk_scatter (row iotas overflow on >2^31-element tensors).
     """
-    cols_shape = jnp.broadcast_shapes(idx.shape, vals.shape) + (chunk,)
-    cols = jax.lax.broadcasted_iota(jnp.int32, cols_shape, len(cols_shape) - 1)
+    c = chunk_view(x, chunk)
+    if topm is None:
+        topm = idx.shape[-1] if idx.ndim > x.ndim else 1
+    if topm == 1:
+        return _gather_one(c, idx)
+    outs = [_gather_one(c, idx[..., j]) for j in range(topm)]
+    return jnp.stack(outs, axis=-1)
+
+
+def _scatter_one(vals: jnp.ndarray, idx: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Broadcast (vals, idx) over (..., n_chunks) -> dense (..., n_chunks*chunk).
+
+    Lane-iota one-hot compare rather than put_along_axis: scatter row indices
+    are an iota over n_chunks, which overflows int32 for >2^31-element tensors
+    (stacked MoE experts); the lane iota only holds values < chunk. This is
+    also exactly the form the Pallas scatter/ef_update kernels use on TPU.
+    """
+    shape = jnp.broadcast_shapes(idx.shape, vals.shape)
+    cols = jax.lax.broadcasted_iota(jnp.int32, shape + (chunk,), len(shape))
     z = jnp.where(cols == idx[..., None], vals[..., None], jnp.zeros((), vals.dtype))
-    return z.reshape(z.shape[:-2] + (cp,))
+    return z.reshape(shape[:-1] + (shape[-1] * chunk,))
+
+
+def chunk_scatter(
+    vals: jnp.ndarray, idx: jnp.ndarray, chunk: int, size: int, topm: int = 1
+) -> jnp.ndarray:
+    """Dense (..., size) with per-chunk ``vals`` at ``idx``, zeros elsewhere.
+
+    vals and idx broadcast against each other (shared leader idx vs
+    per-worker vals); the output shape follows the broadcasted result. For
+    topm > 1 both end in (..., n_chunks, topm) — pass ``topm``; the trailing
+    shape alone is ambiguous when topm == n_chunks. Writes into the
+    zero-padded tail chunk are dropped by the final slice to ``size``.
+    """
+    if topm == 1:
+        out = _scatter_one(vals, idx, chunk)
+    else:
+        out = _scatter_one(vals[..., 0], idx[..., 0], chunk)
+        for j in range(1, topm):  # top-m: m is small and static
+            out = out + _scatter_one(vals[..., j], idx[..., j], chunk)
+    return out[..., :size]

@@ -49,6 +49,7 @@ __all__ = [
     "CompressorConfig",
     "compress",
     "select_indices",
+    "exact_k",
     "resolve_backend_with_deprecation",
     "COMPRESSORS",
     "compression_rate",
@@ -74,6 +75,15 @@ class CompressorConfig:
     topm: int = 1
     exact: bool = False
     use_kernel: bool = False
+
+    def __post_init__(self):
+        # fail fast: topm > chunk would silently duplicate indices in the
+        # masked-argmax kernels (double-counted scatters) instead of erroring
+        if not 1 <= self.topm <= self.chunk:
+            raise ValueError(
+                f"topm must be in [1, chunk]; got topm={self.topm} "
+                f"chunk={self.chunk} (compression rate = chunk/topm)"
+            )
 
     @property
     def rate(self) -> float:
@@ -141,14 +151,22 @@ def _select_true(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
 
 
 def _select_random(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
-    """Shared random index set, re-drawn each step from a counter-derived key."""
+    """Shared random index set, re-drawn each step from a counter-derived key.
+
+    The draw is layout-consistent: jax.random fills shapes in row-major
+    order from the flat counter stream, so a (n_chunks,) flat draw and a
+    (*lead, n_chunks_per_row) trailing-axis draw of the same total chunk
+    count are bitwise identical after reshape — flat ≡ rowwise holds for
+    random_k exactly like for the data-dependent selectors.
+    """
     del backend
     key = jax.random.fold_in(jax.random.PRNGKey(0x5CA1EC0), t)
+    lead = ef.shape[1:-1]  # per-tensor dims between the worker axis and chunks
     n_ch = -(-ef.shape[-1] // cfg.chunk)
     if cfg.topm == 1:
-        return jax.random.randint(key, (n_ch,), 0, cfg.chunk, dtype=jnp.int32)
+        return jax.random.randint(key, lead + (n_ch,), 0, cfg.chunk, dtype=jnp.int32)
     # sample without replacement per chunk via random values + top_k
-    r = jax.random.uniform(key, (n_ch, cfg.chunk))
+    r = jax.random.uniform(key, lead + (n_ch, cfg.chunk))
     _, idx = jax.lax.top_k(r, cfg.topm)
     return idx.astype(jnp.int32)
 
@@ -165,9 +183,13 @@ COMPRESSORS = ("clt_k", "true_topk", "local_topk", "random_k", "none")
 def select_indices(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
     """The chunked index-selection step of each compressor, backend-dispatched.
 
-    Shared-index compressors return the shared (n_chunks[, topm]) set;
-    local_topk returns per-worker (n, n_chunks[, topm]) sets. This is the
-    entry point ``scalecom_reduce``'s fused path shares with ``compress``.
+    ef is worker-stacked with chunks along the trailing axis — (n, size) in
+    the flat layout or (n, *param_shape) in the layout-preserving rowwise
+    layout; the selectors are layout-agnostic. Shared-index compressors
+    return the shared (..., n_chunks[, topm]) set (no worker axis);
+    local_topk returns per-worker (n, ..., n_chunks[, topm]) sets. This is
+    the entry point ``scalecom_reduce``'s execute stage shares with
+    ``compress``.
     """
     if cfg.name == "local_topk":
         return backend.select_indices(ef, cfg.chunk, cfg.topm)
@@ -179,7 +201,8 @@ def select_indices(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array
 # ---------------------------------------------------------------------------
 
 
-def _exact_k(size: int, cfg: CompressorConfig) -> int:
+def exact_k(size: int, cfg: CompressorConfig) -> int:
+    """k of the exact (dense top-k) analysis path: size * topm / chunk."""
     return max(1, int(size * cfg.topm // cfg.chunk))
 
 
@@ -187,7 +210,7 @@ def _compress_exact(
     ef: Array, t: Array, cfg: CompressorConfig
 ) -> Tuple[Array, Array, Array]:
     n, size = ef.shape
-    k = _exact_k(size, cfg)
+    k = exact_k(size, cfg)
     if cfg.name == "clt_k":
         idx_all = jax.vmap(lambda e: jax.lax.top_k(jnp.abs(e), k)[1])(ef)
         idx = leader_pick(idx_all, jnp.mod(t, n))

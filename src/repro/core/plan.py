@@ -1,0 +1,198 @@
+"""Per-tensor reduce planning — the *plan* stage of the unified pipeline.
+
+``scalecom_reduce`` is split into two stages:
+
+  plan     (this module)  — pure-Python, resolved once per tree structure and
+           cached: per-tensor compression rules (rate_rules, min_size/dense
+           fallback), grouping, chunk layout, residue storage shape, the
+           execute-stage work view, and the wire-byte accounting.
+  execute  (core.scalecom) — traced jnp, one layout-agnostic implementation
+           of Algorithm 1 driven entirely by the plan: flat is the
+           degenerate single-row case of the trailing-axis (rowwise) form,
+           so every compressor/feature lands once, in both layouts, on both
+           backends.
+
+Plans are static with respect to tracing: every field is shape/config
+metadata (no arrays), so building them inside a jit'd reduce costs nothing
+after the first trace, and the lru_cache below removes even the Python cost
+on retrace-free steps.
+
+Byte accounting — ONE rule for both layouts
+-------------------------------------------
+Per-worker TRANSMIT bytes for one tensor and one step (fp32 values, int32
+indices; k = n_chunks * topm kept entries). Send-side only: every worker
+additionally *receives* the k reduced values (and, for shared-index
+compressors, the leader's k-index broadcast) on the down leg — the
+link-level round trip is modeled by ``analysis.perfmodel``, which uses this
+same rule for its up leg:
+
+  dense                      4 * size            (the gradient itself)
+  values (every compressor)  4 * k               (each worker ships its k)
+  indices:
+    local_topk               + 4 * k             every worker ships its OWN set
+    clt_k / true_topk        + 4 * k / G         only the LEADER ships the
+                                                 shared set — the paper's O(k)
+                                                 index broadcast (§5),
+                                                 amortized over the G workers
+    random_k                 + 0                 indices re-derived from the
+                                                 shared step counter; nothing
+                                                 crosses the wire
+
+This replaces the historical split accounting (rowwise charged a flat
+``8k``; flat charged ``4k + 4|idx|``, which billed the shared index set to
+every worker — and, for local_topk, billed ALL workers' sets to each
+worker). ``analysis.perfmodel`` uses the same amortized-index rule, and
+examples/multipod_groups.py asserts measured == planned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.chunked import num_chunks
+from repro.core.compressors import CompressorConfig, exact_k
+from repro.core.rates import resolve_compressor
+from repro.core.state import resolve_layout, storage_shape
+
+Shape = Tuple[int, ...]
+
+__all__ = ["TensorPlan", "plan_tensors", "payload_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPlan:
+    """Everything the execute stage needs to know about one tensor.
+
+    path:          pytree key path (also the residue-dict key)
+    shape:         parameter shape (no worker axis)
+    size:          element count
+    groups:        G — ScaleCom worker count after hierarchical folding
+    layout:        resolved chunk layout ("flat" | "rowwise")
+    comp:          resolved CompressorConfig, or None => dense reduce
+    storage:       residue storage shape (no worker axis)
+    work:          execute-stage view (no worker axis): ``(size,)`` for the
+                   flat layout and the exact analysis path, the full
+                   parameter shape for rowwise — chunks always run along
+                   work[-1], so flat is the single-row degenerate case
+    n_chunks:      total chunks across the tensor in this layout
+    k:             values each worker contributes per step
+    bytes_dense:   4 * size (the uncompressed payload, for ratio reporting)
+    bytes_payload: per-worker wire bytes under the one rule above
+    """
+
+    path: str
+    shape: Shape
+    size: int
+    groups: int
+    layout: str
+    comp: Optional[CompressorConfig]
+    storage: Shape
+    work: Shape
+    n_chunks: int
+    k: int
+    bytes_dense: float
+    bytes_payload: float
+
+    @property
+    def dense(self) -> bool:
+        return self.comp is None
+
+
+def payload_bytes(comp: Optional[CompressorConfig], k: int, groups: int) -> float:
+    """Per-worker wire bytes for k kept values (see module docstring)."""
+    values = 4.0 * k
+    if comp is None or comp.name == "none":
+        raise ValueError("payload_bytes is for compressed tensors; dense is 4*size")
+    if comp.name == "local_topk":
+        return values + 4.0 * k
+    if comp.name == "random_k":
+        return values
+    return values + 4.0 * k / groups  # clt_k / true_topk leader broadcast
+
+
+def _plan_one(
+    path: str,
+    shape: Shape,
+    n_stack: int,
+    layout: str,
+    base: CompressorConfig,
+    rate_rules: Tuple,
+    min_size: int,
+    groups: Optional[int],
+    has_residue: bool,
+) -> TensorPlan:
+    size = int(np.prod(shape)) if len(shape) else 1
+    G = groups if groups is not None else n_stack
+    comp: Optional[CompressorConfig] = base
+    if rate_rules:
+        comp = resolve_compressor(path, base, rate_rules)
+    if comp is not None and (comp.name == "none" or size < min_size or not has_residue):
+        comp = None
+
+    storage = storage_shape(shape, layout)
+    if comp is None:
+        return TensorPlan(
+            path=path, shape=shape, size=size, groups=G, layout=layout,
+            comp=None, storage=storage, work=(size,), n_chunks=0, k=0,
+            bytes_dense=4.0 * size, bytes_payload=4.0 * size,
+        )
+
+    # The exact (dense top-k) analysis path always runs on the flat view;
+    # chunked selection runs wherever the layout puts the chunks.
+    work = (size,) if (layout == "flat" or comp.exact) else storage
+    rows = int(np.prod(work[:-1])) if len(work) > 1 else 1
+    nch = rows * num_chunks(work[-1], comp.chunk)
+    k = exact_k(size, comp) if comp.exact else nch * comp.topm
+    return TensorPlan(
+        path=path, shape=shape, size=size, groups=G, layout=layout,
+        comp=comp, storage=storage, work=work, n_chunks=nch, k=k,
+        bytes_dense=4.0 * size, bytes_payload=payload_bytes(comp, k, G),
+    )
+
+
+@functools.lru_cache(maxsize=128)
+def _plan_cached(
+    leaves: Tuple[Tuple[str, Shape, int], ...],
+    residue_paths: frozenset,
+    layout: str,
+    base: CompressorConfig,
+    rate_rules: Tuple,
+    min_size: int,
+    groups: Optional[int],
+) -> Tuple[TensorPlan, ...]:
+    return tuple(
+        _plan_one(
+            path, shape, n_stack, layout, base, rate_rules, min_size, groups,
+            path in residue_paths,
+        )
+        for path, shape, n_stack in leaves
+    )
+
+
+def plan_tensors(
+    leaves: Tuple[Tuple[str, Shape, int], ...],
+    cfg,
+    residue_paths,
+) -> Tuple[TensorPlan, ...]:
+    """Plans for a flattened gradient tree, cached per tree structure.
+
+    leaves:        tuple of (path, param_shape, worker_axis_size) — the tree
+                   signature (shapes only, no arrays), hashable.
+    cfg:           ScaleComConfig (only the plan-relevant fields key the
+                   cache, so backend instances etc. don't defeat it).
+    residue_paths: paths that carry EF state (init_state's min_size cut);
+                   tensors without a residue are reduced densely.
+    """
+    return _plan_cached(
+        tuple(leaves),
+        frozenset(residue_paths),
+        resolve_layout(cfg.layout),
+        cfg.compressor,
+        tuple(cfg.rate_rules),
+        cfg.min_size,
+        cfg.groups,
+    )

@@ -18,6 +18,24 @@ which is exactly the paper's communication structure (constant in n; Table 1
 row "ScaleCom"). There is no dense gradient collective anywhere on the path —
 asserted by tests/test_distributed.py on the lowered HLO.
 
+Plan / execute split
+--------------------
+The reduce is ONE layout-aware pipeline:
+
+  plan     (core.plan, cached per tree structure) — resolves, per tensor:
+           the compressor after rate_rules, the min_size/dense fallback,
+           hierarchical grouping, the chunk layout, residue storage and
+           execute work shapes, and the wire-byte accounting (one rule for
+           both layouts — see core/plan.py).
+  execute  (this module, ``_execute``) — one traced implementation of
+           Algorithm 1 over the plan's trailing-axis work view. The flat
+           layout is the degenerate single-row case of the rowwise form
+           ((G, size) ≡ (G, 1, size) trailing-axis chunks), so there is a
+           single code path for every compressor × layout × backend
+           combination: clt_k / true_topk / local_topk / random_k, any
+           ``topm``, rate rules, and ``groups`` behave identically in both
+           layouts.
+
 Two chunk layouts (ScaleComConfig.layout):
 
   flat     — paper-faithful: the tensor is one flat buffer of chunks. Under
@@ -29,23 +47,25 @@ Two chunk layouts (ScaleComConfig.layout):
              sharding and the *only* collective is the k-value mean. Bitwise
              identical to flat whenever the last dim is a chunk multiple
              (row-major order), and statistically identical otherwise.
+  auto     — the default: the SCALECOM_LAYOUT env var if set (the CI leg
+             that runs tier-1 through the rowwise pipeline), else flat.
 
 Kernel dispatch (ScaleComConfig.backend): every chunked op — selection,
-gather, scatter, and the fused Eq. 5 residue update — routes through a
-``repro.backends`` KernelBackend resolved per call ("auto" probes the
-SCALECOM_BACKEND env var, pallas importability and jax.default_backend()).
-On the pallas backend the per-tensor inner loop is three kernel launches
-(worker-stacked select, fused EF update, ĝ scatter) instead of the 7-pass
-jnp chain, in *both* layouts; on the jnp backend it is the bitwise reference
-chain. Trajectories agree across backends to fp32 tolerance
-(tests/test_backends.py).
+gather, scatter, and the fused Eq. 5 residue update — routes through the ONE
+trailing-axis op set of a ``repro.backends`` KernelBackend resolved per call
+("auto" probes the SCALECOM_BACKEND env var, pallas importability and
+jax.default_backend()). On the pallas backend the per-tensor inner loop is
+three kernel launches (worker-stacked select, fused EF update, ĝ scatter)
+instead of the 7-pass jnp chain, in both layouts; on the jnp backend it is
+the bitwise reference chain. Trajectories agree across backends to fp32
+tolerance (tests/test_backends.py).
 
 Hierarchical / grouped mode (DESIGN.md §5): with ``groups=G < n`` the inner
 n/G workers are dense-averaged first (fast intra-group ICI reduce) and CLT-k
 runs across the G groups (the slow inter-group link, e.g. the multi-pod DCN
 axis). The residue then lives per *group*: build the state with n_workers=G.
 See examples/multipod_groups.py for the 2-pod driver and the DCN-byte
-accounting against analysis/perfmodel.py.
+accounting against core.plan / analysis.perfmodel.
 """
 
 from __future__ import annotations
@@ -55,19 +75,16 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import chunked
 from repro.core.compressors import (
     CompressorConfig,
     compress,
-    leader_pick,
     resolve_backend_with_deprecation,
     select_indices,
 )
 from repro.core.filter import lowpass_update
-from repro.core.rates import resolve_compressor
-from repro.core.state import CODECS, ScaleComState, codec_key, storage_shape
+from repro.core.plan import TensorPlan, plan_tensors
+from repro.core.state import CODECS, ScaleComState, codec_key
 
 Array = jnp.ndarray
 Pytree = Any
@@ -85,7 +102,9 @@ class ScaleComConfig:
     min_size:       tensors smaller than this are reduced densely
     residue_dtype:  fp32 | bf16 | fp8 | fp8_ec (beyond-paper; lossy codecs
                     use stochastic rounding keyed from the step counter)
-    layout:         flat (paper-faithful) | rowwise (layout-preserving)
+    layout:         "auto" (default: $SCALECOM_LAYOUT, else flat) | "flat"
+                    (paper-faithful) | "rowwise" (layout-preserving);
+                    resolved by core.state.resolve_layout at plan time.
     backend:        kernel backend spec for the chunked hot-path ops:
                     "auto" (default; SCALECOM_BACKEND env var, then pallas
                     iff running on TPU, else jnp), "jnp", "pallas", or a
@@ -101,7 +120,7 @@ class ScaleComConfig:
     beta: float = 1.0
     min_size: int = 2048
     residue_dtype: str = "fp32"
-    layout: str = "flat"
+    layout: str = "auto"
     backend: Any = "auto"
     groups: Optional[int] = None
     warmup_steps: int = 0
@@ -133,101 +152,83 @@ def dense_reduce(grads_pw: Pytree) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
-# flat path (chunked, non-exact): the fused kernel route
+# execute stage — one tensor through Algorithm 1, layout-agnostic
 # ---------------------------------------------------------------------------
 
 
-def _reduce_flat_chunked(m, gf, comp, beta, t, backend):
-    """One tensor through Algorithm 1 on the flat layout, backend-fused.
-
-    m, gf: (G, size) fp32 decoded residue / folded gradients. Three backend
-    ops — worker-stacked index selection, fused EF residue update (Eq. 5),
-    and the ĝ densify scatter; on the pallas backend each is one kernel
-    launch (cf. the 7-pass unfused chain priced in bench_kernels.py).
-
-    Returns (ghat (size,), m_new (G, size), vals, idx).
-    """
-    size = gf.shape[-1]
-    ef = m + gf
-    idx = select_indices(ef, t, comp, backend)  # shared, or per-worker (local)
-    m_new, vals = backend.ef_update(m, gf, idx, beta, comp.chunk, comp.topm)
+def _execute_exact(ef: Array, t: Array, comp: CompressorConfig, backend):
+    """Dense top-k analysis path (comp.exact): non-chunked compress()."""
+    size = ef.shape[-1]
+    vals, idx, ghat = compress(ef, t, comp, backend=backend)
     if comp.name == "local_topk":
-        # union-average (gradient build-up): every worker scatters its own set
-        ghat = jnp.mean(backend.scatter(vals, idx, comp.chunk, size, comp.topm), axis=0)
+        own = jax.vmap(
+            lambda v, i: jnp.zeros((size,), ef.dtype).at[i].set(v, mode="drop")
+        )(vals, idx)
     else:
-        vmean = jnp.mean(vals, axis=0)  # all-reduce of k values
-        ghat = backend.scatter(vmean, idx, comp.chunk, size, comp.topm)
-    return ghat, m_new, vals, idx
+        own = jax.vmap(
+            lambda v: jnp.zeros((size,), ef.dtype).at[idx].set(v, mode="drop")
+        )(vals)
+    return ghat, own
 
 
-# ---------------------------------------------------------------------------
-# rowwise path
-# ---------------------------------------------------------------------------
+def _execute(
+    plan: TensorPlan,
+    gw: Array,
+    enc: Pytree,
+    codec,
+    beta: float,
+    t: Array,
+    enc_key,
+    backend,
+    compute_stats: bool,
+):
+    """Algorithm 1 over the plan's trailing-axis work view.
 
+    gw: (G, *plan.shape) folded fp32 gradients. The work view is
+    (G,) + plan.work — (G, size) for the flat layout (the degenerate
+    single-row trailing-axis case) and (G, *param_shape) for rowwise, so no
+    reshape ever crosses a sharded axis in the rowwise layout. All chunked
+    math goes through the backend's one trailing-axis op set; on the pallas
+    backend that is three kernel launches (select, fused Eq. 5 EF update,
+    ĝ scatter).
 
-def _rowwise_indices(efp: Array, t: Array, cfg: CompressorConfig, backend) -> Array:
-    """Shared (R, ncr) index set for the worker-stacked padded EF (G, R, Cp)."""
-    G = efp.shape[0]
-    if cfg.name == "clt_k":
-        idx_all = backend.rw_select_indices(efp, cfg.chunk)  # (G, *lead, ncr)
-        return leader_pick(idx_all, jnp.mod(t, G))
-    if cfg.name == "true_topk":
-        return backend.rw_select_indices(jnp.mean(efp, axis=0), cfg.chunk)
-    if cfg.name == "random_k":
-        key = jax.random.fold_in(jax.random.PRNGKey(0x5CA1EC0), t)
-        ncr = efp.shape[-1] // cfg.chunk
-        return jax.random.randint(
-            key, efp.shape[1:-1] + (ncr,), 0, cfg.chunk, dtype=jnp.int32
-        )
-    raise NotImplementedError(f"{cfg.name} has no rowwise path")
-
-
-def _reduce_rowwise(gw, enc, codec, shape, cfg, t, enc_key, backend):
-    """One tensor through Algorithm 1 in the layout-preserving form.
-
-    The residue/work arrays keep the parameter's full shape — no reshape
-    anywhere, so GSPMD never moves data; chunking runs along the last dim
-    through the backend's rw_* trailing-axis ops (kernels.rowwise on the
-    pallas backend): index selection + the fused EF update + the ĝ scatter,
-    mirroring the flat fused route.
+    Returns (ghat (*plan.shape), new_enc, ef_mean) — ef_mean feeds the
+    contraction_gamma diagnostic (identical in both layouts; None unless
+    compute_stats, so eager callers never pay the extra EF pass).
     """
-    if cfg.compressor.topm != 1:
-        raise NotImplementedError(
-            "rowwise layout supports topm=1 only (chunked top-1 per row); "
-            "use layout='flat' for per-chunk top-m"
-        )
+    comp = plan.comp
     G = gw.shape[0]
-    st_shape = storage_shape(shape, "rowwise")
-    g3 = gw.reshape((G,) + st_shape)  # no-op for rank>=1 params
-    m = codec.decode(enc, st_shape)  # (G, *param_shape)
-    chunk = cfg.compressor.chunk
-    mp = chunked.rw_pad(m, chunk)
-    gp = chunked.rw_pad(g3, chunk)
-    efp = mp + gp  # zero padding is select-safe (see chunked.rw_pad)
-    cp = efp.shape[-1]
-    C = g3.shape[-1]
+    work = gw.reshape((G,) + plan.work)
+    m = codec.decode(enc, plan.storage)
+    if plan.work != plan.storage:
+        m = m.reshape((G,) + plan.work)  # exact path over a rowwise residue
+    C = work.shape[-1]
+    ef = m + work
 
-    if cfg.compressor.name == "local_topk":
-        idx = backend.rw_select_indices(efp, chunk)  # per-worker sets
+    if comp.exact:
+        ghat, own = _execute_exact(ef, t, comp, backend)
+        new_m = lowpass_update(m, work, own, beta)
     else:
-        idx = _rowwise_indices(efp, t, cfg.compressor, backend)
+        idx = select_indices(ef, t, comp, backend)  # shared, or per-worker
+        # Fused Eq. 5: one pass emits both the residue update and the values
+        # each worker contributes to the k-value all-reduce.
+        new_m, vals = backend.ef_update(m, work, idx, beta, comp.chunk, comp.topm)
+        if comp.name == "local_topk":
+            # union-average (gradient build-up): every worker scatters its own
+            ghat = jnp.mean(
+                backend.scatter(vals, idx, comp.chunk, C, comp.topm), axis=0
+            )
+        else:
+            vmean = jnp.mean(vals, axis=0)  # all-reduce of k values
+            ghat = backend.scatter(vmean, idx, comp.chunk, C, comp.topm)
 
-    # Fused Eq. 5: one pass emits both the residue update and the values each
-    # worker contributes to the k-value all-reduce.
-    m_new_p, vals = backend.rw_ef_update(mp, gp, idx, cfg.beta, chunk)
-    new_m = m_new_p[..., :C]
-
-    if cfg.compressor.name == "local_topk":
-        own = backend.rw_scatter(vals, idx, chunk, cp)[..., :C]
-        ghat = jnp.mean(own, axis=0)
-        k = int(np.prod(vals.shape[1:]))
-    else:
-        vmean = jnp.mean(vals, axis=0)  # all-reduce of k values
-        ghat = backend.rw_scatter(vmean, idx, chunk, cp)[..., :C]
-        k = int(np.prod(vmean.shape))
-
-    new_enc = codec.encode(new_m, st_shape, key=enc_key)
-    return ghat.reshape(shape), new_enc, k
+    new_enc = codec.encode(
+        new_m.reshape((G,) + plan.storage), plan.storage, key=enc_key
+    )
+    ef_mean = (
+        jnp.mean(ef, axis=0).reshape(plan.shape) if compute_stats else None
+    )
+    return ghat.reshape(plan.shape), new_enc, ef_mean
 
 
 # ---------------------------------------------------------------------------
@@ -251,83 +252,41 @@ def scalecom_reduce(
     codec = CODECS[cfg.residue_dtype]
     backend = _resolve_cfg_backend(cfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads_pw)
+    plans = plan_tensors(
+        tuple(
+            (jax.tree_util.keystr(p), tuple(g.shape[1:]), g.shape[0])
+            for p, g in flat
+        ),
+        cfg,
+        frozenset(state.residues),
+    )
     t = state.t
     new_residues = dict(state.residues)
     ghat_leaves = []
-    bytes_sent = 0.0  # per-worker payload (values + indices), fp32/int32 accounting
+    bytes_sent = 0.0  # per-worker payload under the plan's one byte rule
     bytes_dense = 0.0
     sq_err = 0.0
     sq_all = 0.0
 
-    for path_tuple, g in flat:
-        path = jax.tree_util.keystr(path_tuple)
-        n = g.shape[0]
-        shape = g.shape[1:]
-        size = int(np.prod(shape)) if len(shape) else 1
-        G = cfg.n_workers(n)
-        bytes_dense += 4.0 * size
+    for plan, (_, g) in zip(plans, flat):
+        bytes_dense += plan.bytes_dense
+        bytes_sent += plan.bytes_payload
+        gw = _group_fold(g.astype(jnp.float32), plan.groups)
 
-        comp = cfg.compressor
-        if cfg.rate_rules:
-            comp = resolve_compressor(path, cfg.compressor, cfg.rate_rules)
-        if (
-            comp is None
-            or comp.name == "none"
-            or size < cfg.min_size
-            or path not in state.residues
-        ):
-            gw = _group_fold(g.astype(jnp.float32), G)
-            ghat = jnp.mean(gw, axis=0)
-            bytes_sent += 4.0 * size
-            ghat_leaves.append(ghat.reshape(shape).astype(g.dtype))
-            continue
-
-        gw = _group_fold(g.astype(jnp.float32), G)
-        enc = state.residues[path]
-        enc_key = codec_key(path, t)  # stochastic-rounding dither for lossy codecs
-
-        if cfg.layout == "rowwise":
-            ghat, new_enc, k = _reduce_rowwise(
-                gw, enc, codec, shape, dataclasses.replace(cfg, compressor=comp), t,
-                enc_key, backend,
-            )
-            new_residues[path] = new_enc
+        if plan.dense:
+            ghat = jnp.mean(gw, axis=0).reshape(plan.shape)
             ghat_leaves.append(ghat.astype(g.dtype))
-            bytes_sent += 8.0 * k
-            if compute_stats:
-                st_shape = storage_shape(shape, "rowwise")
-                y = jnp.mean(codec.decode(new_enc, st_shape), axis=0)  # approx
-                sq_all = sq_all + jnp.sum(y**2)
             continue
 
-        gf = gw.reshape(G, size)
-        m = codec.decode(enc, (size,))  # (G, size) fp32
-        if comp.exact:
-            # analysis-only dense top-k: stays on the unfused compress() path
-            ef = m + gf
-            vals, idx, ghat = compress(ef, t, comp, backend=backend)
-            if comp.name == "local_topk":
-                own = jax.vmap(
-                    lambda v, i: jnp.zeros((size,), ef.dtype).at[i].set(v, mode="drop")
-                )(vals, idx)
-            else:
-                own = jax.vmap(
-                    lambda v: jnp.zeros((size,), ef.dtype).at[idx].set(v, mode="drop")
-                )(vals)
-            new_m = lowpass_update(m, gf, own, cfg.beta)
-        else:
-            ghat, new_m, vals, idx = _reduce_flat_chunked(
-                m, gf, comp, cfg.beta, t, backend
-            )
-        new_residues[path] = codec.encode(new_m, (size,), key=enc_key)
-        ghat_leaves.append(ghat.reshape(shape).astype(g.dtype))
-
-        k = vals.shape[-1] if vals.ndim == 2 else int(np.prod(vals.shape[1:]))
-        bytes_sent += 4.0 * k + 4.0 * np.prod(idx.shape)
+        ghat, new_enc, ef_mean = _execute(
+            plan, gw, state.residues[plan.path], codec, cfg.beta, t,
+            codec_key(plan.path, t), backend, compute_stats,
+        )
+        new_residues[plan.path] = new_enc
+        ghat_leaves.append(ghat.astype(g.dtype))
         if compute_stats:
-            y = jnp.mean(m + gf, axis=0)
-            sq_err = sq_err + jnp.sum((y - ghat) ** 2)
-            sq_all = sq_all + jnp.sum(y**2)
+            sq_err = sq_err + jnp.sum((ef_mean - ghat) ** 2)
+            sq_all = sq_all + jnp.sum(ef_mean**2)
 
     ghat_tree = jax.tree_util.tree_unflatten(treedef, ghat_leaves)
     new_state = ScaleComState(residues=new_residues, t=t + 1)
@@ -335,6 +294,6 @@ def scalecom_reduce(
         "comm_bytes_per_worker": jnp.asarray(bytes_sent, jnp.float32),
         "comm_bytes_dense": jnp.asarray(bytes_dense, jnp.float32),
     }
-    if compute_stats and cfg.layout != "rowwise":
+    if compute_stats:
         stats["contraction_gamma"] = sq_err / jnp.maximum(sq_all, 1e-30)
     return ghat_tree, new_state, stats

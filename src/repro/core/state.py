@@ -36,6 +36,7 @@ Residue storage layout follows ScaleComConfig.layout:
 from __future__ import annotations
 
 import dataclasses
+import os
 import zlib
 from typing import Any, Dict, Tuple, Union
 
@@ -57,9 +58,35 @@ __all__ = [
     "codec_roundtrip_error",
     "init_state",
     "residue_bytes",
+    "resolve_layout",
     "storage_shape",
     "stochastic_round",
 ]
+
+_LAYOUT_ENV = "SCALECOM_LAYOUT"
+_LAYOUTS = ("flat", "rowwise")
+
+
+def resolve_layout(spec: Union[str, None] = "auto") -> str:
+    """Resolve a chunk-layout spec ("auto" | "flat" | "rowwise").
+
+    "auto" (and None) read the SCALECOM_LAYOUT env var at call time —
+    compat-layer style, mirroring resolve_backend's SCALECOM_BACKEND probe
+    (that is the CI leg that runs the whole tier-1 suite through the
+    layout-preserving rowwise pipeline) — and fall back to "flat", the
+    paper-faithful default. An explicit layout always wins. Must resolve
+    identically at init_state and scalecom_reduce time, which is why both
+    route through here.
+    """
+    if spec in (None, "auto"):
+        env = os.environ.get(_LAYOUT_ENV, "").strip()
+        spec = env or "flat"
+    if spec not in _LAYOUTS:
+        raise ValueError(
+            f"unknown chunk layout {spec!r}; expected one of {_LAYOUTS} "
+            f'(or "auto" to probe ${_LAYOUT_ENV})'
+        )
+    return spec
 
 _FP8_MAX = 448.0  # e4m3 finite max
 _FP8_CHUNK = 512  # flat-layout scale granularity
@@ -106,14 +133,13 @@ def storage_shape(param_shape: Shape, layout: str) -> Shape:
     (R, C) was measurably worse for expert-sharded tensors — the merged
     leading dim can't carry the expert-axis sharding (see EXPERIMENTS §Perf).
     """
+    layout = resolve_layout(layout)
     size = int(np.prod(param_shape)) if len(param_shape) else 1
     if layout == "flat":
         return (size,)
-    if layout == "rowwise":
-        if len(param_shape) == 0:
-            return (1,)
-        return tuple(param_shape)
-    raise ValueError(layout)
+    if len(param_shape) == 0:
+        return (1,)
+    return tuple(param_shape)
 
 
 class ResidueCodec:
@@ -303,12 +329,14 @@ def init_state(
     n_workers: int,
     residue_dtype: str = "fp32",
     min_size: int = 2048,
-    layout: str = "flat",
+    layout: str = "auto",
 ) -> ScaleComState:
     """Zero-initialized ScaleCom state for a parameter pytree.
 
     Tensors below ``min_size`` carry no residue: they are always reduced
-    densely (norm scales, biases). Must match ScaleComConfig at train time.
+    densely (norm scales, biases). Must match ScaleComConfig at train time;
+    ``layout`` resolves through ``resolve_layout`` exactly like
+    ``ScaleComConfig.layout`` does, so the "auto" defaults stay in sync.
     """
     codec = CODECS[residue_dtype]
     residues = {}
@@ -365,7 +393,7 @@ def residue_bytes(
     n_workers: int,
     residue_dtype: str = "fp32",
     min_size: int = 2048,
-    layout: str = "flat",
+    layout: str = "auto",
 ) -> int:
     codec = CODECS[residue_dtype]
     total = 0

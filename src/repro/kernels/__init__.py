@@ -2,8 +2,10 @@
 Table 1: ~3 FLOPs/element) and the fused residue update.
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd 1-D wrapper
-with CPU interpret fallback), ref.py (pure-jnp oracle), rowwise.py
-(trailing-axis wrappers for the layout-preserving path). Production dispatch
-goes through repro.backends (resolve_backend); tile geometry is swept by
-repro.backends.autotune and benchmarked in benchmarks/bench_kernels.py.
+with CPU interpret fallback), ref.py (pure-jnp oracle), rowwise.py (the
+trailing-axis launchers every backend op routes through — one surface for
+both the flat and the layout-preserving layouts, top-1 and top-m). Production
+dispatch goes through repro.backends (resolve_backend); tile geometry is
+swept by repro.backends.autotune and benchmarked in
+benchmarks/bench_kernels.py.
 """

@@ -64,7 +64,7 @@ def _ef_update_kernel(m_ref, g_ref, idx_ref, m_out_ref, val_ref, *, beta: float)
 def row_ef_update(m2d, g2d, idx, beta, *, interpret, block_chunks):
     """(rows, chunk) m/g + per-row idx -> (m', vals); grid/padding here.
 
-    Shared by the flat wrapper below and kernels.rowwise.rw_ef_update_pallas.
+    Shared by the flat wrapper below and kernels.rowwise.ef_update_trailing.
     """
     n_rows, chunk = m2d.shape
     mp = _pad_rows(m2d, block_chunks)

@@ -27,11 +27,22 @@ def chunk_gather_ref(x: jnp.ndarray, idx: jnp.ndarray, chunk: int):
     return chunked.chunk_gather(x, idx, chunk)
 
 
-def ef_update_ref(m: jnp.ndarray, g: jnp.ndarray, idx: jnp.ndarray, beta: float, chunk: int):
-    """Unfused Eq. 5 reference: returns (m_new, vals)."""
+def ef_update_ref(
+    m: jnp.ndarray, g: jnp.ndarray, idx: jnp.ndarray, beta: float, chunk: int,
+    topm: int = None,
+):
+    """Unfused Eq. 5 reference: returns (m_new, vals).
+
+    topm follows the chunk_gather convention: None infers a top-m tail from
+    idx.ndim > m.ndim, which is only unambiguous for unbatched data — pass
+    topm explicitly when a shared (n_chunks, topm) set meets worker-stacked
+    m/g of the same rank.
+    """
     n = m.shape[-1]
+    if topm is None:
+        topm = idx.shape[-1] if idx.ndim > m.ndim else 1
     ef = m + g
-    vals = chunked.chunk_gather(ef, idx, chunk)
-    ghat_own = chunked.chunk_scatter(vals, idx, chunk, n)
+    vals = chunked.chunk_gather(ef, idx, chunk, topm)
+    ghat_own = chunked.chunk_scatter(vals, idx, chunk, n, topm)
     m_new = m + beta * (g - ghat_own)
     return m_new, vals

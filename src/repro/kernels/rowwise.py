@@ -1,24 +1,26 @@
-"""Trailing-axis (rowwise-layout) Pallas wrappers — the layout the production
-mesh actually runs.
+"""Trailing-axis Pallas wrappers — the one kernel surface of the reduce.
 
-The rowwise layout (core.chunked rw_* ops, ScaleComConfig.layout="rowwise")
-chunks each tensor along its native last dim so indices/values/residues keep
-the parameter's sharding. These wrappers give that path the same Pallas
-kernels as the flat layout: an input of shape (..., Cp) with Cp % chunk == 0
-is locally a contiguous stack of (Cp/chunk) chunks per row, so the
+Every chunked op of ``scalecom_reduce`` runs over the trailing axis of an
+arbitrarily-batched array ((..., Cp) with Cp % chunk == 0): a flat 1-D
+buffer, a worker-stacked (n_workers, size) tensor, and a layout-preserving
+(n_workers, *param_shape) tensor are all the *same launch* — flat is the
+degenerate single-row case. An input of shape (..., Cp) is locally a
+contiguous stack of (Cp/chunk) chunks per row, so the
 (leading-dims, Cp) -> (total_chunks, chunk) reshape done here is a pure
 row-major relayout — free on-device, and *per-shard* legal under GSPMD: the
 kernels always execute on the local shard, whose trailing dim is a chunk
-multiple by the sharding contract, unlike the global 1-D flatten the flat
-layout needs (which is what forces resharding and motivated the rowwise
-layout in the first place — see core/chunked.py).
+multiple by the sharding contract, unlike a global 1-D flatten of a
+model-sharded tensor (which forces resharding and motivated the
+layout-preserving rowwise layout in the first place — see core/chunked.py).
 
 All wrappers accept arbitrary leading batch dims (worker axis included), so
 callers never vmap a pallas_call: one launch covers every worker's tiles.
-``idx``/``vals`` broadcast against the data the way core.chunked.rw_* do
-(shared leader indices vs per-worker values).
+``idx``/``vals`` broadcast against the data the way core.chunked ops do
+(shared leader indices vs per-worker values); ``topm`` is explicit and
+static, so a shared (n_chunks, topm) index set is never confused with a
+worker-stacked (n_workers, n_chunks) one.
 
-Tile geometry and grid handling are shared with the flat kernels
+Tile geometry and grid handling are shared with the flat 1-D kernels
 (kernels.chunk_topk row launchers); ``block_chunks`` is swept by
 repro.backends.autotune and benchmarked in benchmarks/bench_kernels.py.
 """
@@ -39,18 +41,19 @@ from repro.kernels.chunk_topk import (
 from repro.kernels.ef_update import row_ef_update
 
 __all__ = [
-    "rw_select_pallas",
-    "rw_gather_pallas",
-    "rw_scatter_pallas",
-    "rw_ef_update_pallas",
+    "select_trailing",
+    "gather_trailing",
+    "scatter_trailing",
+    "ef_update_trailing",
 ]
 
 
 def _check_padded(cp: int, chunk: int) -> int:
     if cp % chunk:
         raise ValueError(
-            f"rowwise kernels need the trailing dim pre-padded to the chunk "
-            f"size (got {cp} % {chunk} != 0); call core.chunked.rw_pad first"
+            f"trailing-axis kernels need the last dim pre-padded to the chunk "
+            f"size (got {cp} % {chunk} != 0); call core.chunked.pad_to_chunks "
+            f"first"
         )
     return cp // chunk
 
@@ -66,58 +69,63 @@ def _idx_rows(idx: jnp.ndarray, lead, ncr: int, topm_tail) -> jnp.ndarray:
     return idx.reshape((-1,) + tuple(topm_tail))
 
 
+def _tail(topm: int):
+    return () if topm == 1 else (topm,)
+
+
 @functools.partial(
     jax.jit, static_argnames=("chunk", "topm", "interpret", "block_chunks")
 )
-def rw_select_pallas(
+def select_trailing(
     x: jnp.ndarray, chunk: int, topm: int = 1, *, interpret: bool = True,
     block_chunks: int = BLOCK_CHUNKS,
 ):
     """Per-chunk magnitude top-m along the last dim.
 
     x: (..., Cp). Returns (idx, vals) of shape (..., Cp/chunk) for topm == 1,
-    (..., Cp/chunk, topm) otherwise — matching core.chunked.rw_argmax/rw_gather.
+    (..., Cp/chunk, topm) otherwise — matching core.chunked.chunk_argmax /
+    chunk_topm_indices + chunk_gather.
     """
     ncr = _check_padded(x.shape[-1], chunk)
     idx, val = row_select(
         _as_rows(x, chunk), topm=topm, interpret=interpret, block_chunks=block_chunks
     )
-    out_shape = x.shape[:-1] + (ncr,) + (() if topm == 1 else (topm,))
+    out_shape = x.shape[:-1] + (ncr,) + _tail(topm)
     return idx.reshape(out_shape), val.reshape(out_shape)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "block_chunks"))
-def rw_gather_pallas(
-    x: jnp.ndarray, idx: jnp.ndarray, chunk: int, *, interpret: bool = True,
-    block_chunks: int = BLOCK_CHUNKS,
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "topm", "interpret", "block_chunks")
+)
+def gather_trailing(
+    x: jnp.ndarray, idx: jnp.ndarray, chunk: int, topm: int = 1, *,
+    interpret: bool = True, block_chunks: int = BLOCK_CHUNKS,
 ):
     """Values of (..., Cp) ``x`` at per-chunk offsets ``idx`` (broadcastable
-    (..., Cp/chunk) or (..., Cp/chunk, m))."""
+    (..., Cp/chunk) or, for topm > 1, (..., Cp/chunk, topm))."""
     ncr = _check_padded(x.shape[-1], chunk)
-    topm_tail = () if idx.ndim <= x.ndim else idx.shape[-1:]
-    idx2 = _idx_rows(idx, x.shape[:-1], ncr, topm_tail)
+    idx2 = _idx_rows(idx, x.shape[:-1], ncr, _tail(topm))
     val = row_gather(
         _as_rows(x, chunk), idx2, interpret=interpret, block_chunks=block_chunks
     )
-    return val.reshape(x.shape[:-1] + (ncr,) + tuple(topm_tail))
+    return val.reshape(x.shape[:-1] + (ncr,) + _tail(topm))
 
 
 @functools.partial(
     jax.jit, static_argnames=("chunk", "cp", "topm", "interpret", "block_chunks")
 )
-def rw_scatter_pallas(
+def scatter_trailing(
     vals: jnp.ndarray, idx: jnp.ndarray, chunk: int, cp: int, *,
     topm: int = 1, interpret: bool = True, block_chunks: int = BLOCK_CHUNKS,
 ):
     """Dense (..., cp) with per-chunk ``vals`` at ``idx``, zeros elsewhere.
 
     vals and idx broadcast against each other (shared leader idx vs per-worker
-    vals), like core.chunked.rw_scatter. For topm > 1 both end in
-    (..., cp/chunk, topm); pass ``topm`` so the trailing structure is
-    unambiguous for any chunk count.
+    vals), like core.chunked.chunk_scatter. For topm > 1 both end in
+    (..., cp/chunk, topm).
     """
     ncr = _check_padded(cp, chunk)
-    tail = () if topm == 1 else (topm,)
+    tail = _tail(topm)
     n_tail = len(tail) + 1
     lead = jnp.broadcast_shapes(idx.shape[:-n_tail], vals.shape[:-n_tail])
     idx2 = _idx_rows(idx, lead, ncr, tail)
@@ -129,14 +137,15 @@ def rw_scatter_pallas(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("beta", "chunk", "interpret", "block_chunks")
+    jax.jit, static_argnames=("beta", "chunk", "topm", "interpret", "block_chunks")
 )
-def rw_ef_update_pallas(
+def ef_update_trailing(
     m: jnp.ndarray,
     g: jnp.ndarray,
     idx: jnp.ndarray,
     beta: float,
     chunk: int,
+    topm: int = 1,
     *,
     interpret: bool = True,
     block_chunks: int = BLOCK_CHUNKS,
@@ -144,16 +153,17 @@ def rw_ef_update_pallas(
     """Fused Eq. 5 residue update along the trailing axis.
 
     m, g: (..., Cp) with Cp % chunk == 0; idx broadcastable (..., Cp/chunk)
-    or (..., Cp/chunk, topm). beta static. Returns (m_new (..., Cp), vals).
+    or, for topm > 1, (..., Cp/chunk, topm). beta static. Returns
+    (m_new (..., Cp), vals (..., Cp/chunk[, topm])).
     """
     ncr = _check_padded(m.shape[-1], chunk)
-    topm_tail = () if idx.ndim <= m.ndim else idx.shape[-1:]
-    idx2 = _idx_rows(idx, m.shape[:-1], ncr, topm_tail)
+    tail = _tail(topm)
+    idx2 = _idx_rows(idx, m.shape[:-1], ncr, tail)
     m_new, vals = row_ef_update(
         _as_rows(m, chunk), _as_rows(g, chunk), idx2, beta,
         interpret=interpret, block_chunks=block_chunks,
     )
     return (
         m_new.reshape(m.shape),
-        vals.reshape(m.shape[:-1] + (ncr,) + tuple(topm_tail)),
+        vals.reshape(m.shape[:-1] + (ncr,) + tail),
     )

@@ -183,35 +183,42 @@ def test_stacked_shared_index_gather_ef_parity(topm):
 
 
 # ---------------------------------------------------------------------------
-# rowwise (layout-preserving) parity
+# trailing-axis parity on batched (layout-preserving) shapes — the SAME ops
+# as the flat tests above; rowwise is just a non-degenerate leading shape
 # ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
-def test_rowwise_parity(dtype):
+@pytest.mark.parametrize("topm", [1, 2])
+@pytest.mark.parametrize("C", [48, 45])  # chunk multiple + tail-chunk padding
+def test_batched_trailing_axis_parity(dtype, topm, C):
     chunk = 16
-    x = _rand((3, 5, 48), 41, dtype)  # trailing dim pre-padded: 48 % 16 == 0
-    i1 = JNP.rw_select_indices(x, chunk)
-    i2 = PAL.rw_select_indices(x, chunk)
+    x = _rand((3, 5, C), 41, dtype)
+    i1 = JNP.select_indices(x, chunk, topm)
+    i2 = PAL.select_indices(x, chunk, topm)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
-    v1 = JNP.rw_gather(x, i1, chunk)
-    v2 = PAL.rw_gather(x, i2, chunk)
+    v1 = JNP.gather(x, i1, chunk, topm)
+    v2 = PAL.gather(x, i2, chunk, topm)
     np.testing.assert_allclose(
         np.asarray(v1, np.float32), np.asarray(v2, np.float32), rtol=1e-6
     )
-    d1 = JNP.rw_scatter(v1, i1, chunk, 48)
-    d2 = PAL.rw_scatter(v2, i2, chunk, 48)
+    d1 = JNP.scatter(v1, i1, chunk, C, topm)
+    d2 = PAL.scatter(v2, i2, chunk, C, topm)
+    assert d1.shape == d2.shape == (3, 5, C)
     np.testing.assert_allclose(
         np.asarray(d1, np.float32), np.asarray(d2, np.float32), rtol=1e-6
     )
 
 
-def test_rowwise_ef_update_parity_shared_idx():
+@pytest.mark.parametrize("topm", [1, 2])
+def test_batched_ef_update_parity_shared_idx(topm):
+    """A shared (no worker axis) index set against worker-stacked 3-D data —
+    the exact shapes the rowwise layout dispatches."""
     chunk, G = 16, 4
     m, g = _rand((G, 5, 48), 51), _rand((G, 5, 48), 52)
-    idx = JNP.rw_select_indices(jnp.mean(m + g, axis=0), chunk)  # (5, 3) shared
-    m1, v1 = JNP.rw_ef_update(m, g, idx, 0.25, chunk)
-    m2, v2 = PAL.rw_ef_update(m, g, idx, 0.25, chunk)
+    idx = JNP.select_indices(jnp.mean(m + g, axis=0), chunk, topm)  # (5, 3[, topm])
+    m1, v1 = JNP.ef_update(m, g, idx, 0.25, chunk, topm)
+    m2, v2 = PAL.ef_update(m, g, idx, 0.25, chunk, topm)
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5, atol=1e-7)
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5, atol=1e-7)
 
@@ -248,6 +255,8 @@ _TRAJ_CASES = [
     ("flat", "clt_k", 2),
     ("flat", "local_topk", 1),
     ("rowwise", "clt_k", 1),
+    ("rowwise", "clt_k", 2),  # rowwise top-m: the unified pipeline's new path
+    ("rowwise", "local_topk", 2),
 ]
 
 
@@ -303,7 +312,7 @@ def test_pallas_backend_bypasses_jnp_chunked_ops(monkeypatch, layout):
 
     for name in (
         "chunk_argmax", "chunk_topm_indices", "chunk_gather", "chunk_scatter",
-        "rw_argmax", "rw_gather", "rw_scatter", "chunk_view",
+        "chunk_view",
     ):
         monkeypatch.setattr(chunked, name, _trip(name))
 
@@ -318,6 +327,39 @@ def test_pallas_backend_bypasses_jnp_chunked_ops(monkeypatch, layout):
     ghat, state, _ = scalecom_reduce({"w": g}, state, cfg)
     assert ghat["w"].shape == shape
     assert int(state.t) == 1
+
+
+# ---------------------------------------------------------------------------
+# unified-surface tripwires
+# ---------------------------------------------------------------------------
+
+
+def test_no_rw_symbols_survive():
+    """Grep-clean (compat-layer style): the dual flat/rowwise op surface is
+    gone for good — no ``rw_*`` symbol anywhere in the package. A reappearing
+    rw_ helper means a feature is about to land twice (once per layout), the
+    exact trap the unified trailing-axis pipeline removed."""
+    import pathlib
+    import re
+
+    import repro
+
+    root = pathlib.Path(repro.__file__).parent
+    offenders = [
+        f"{path.relative_to(root)}:{ln}: {line.strip()}"
+        for path in sorted(root.rglob("*.py"))
+        for ln, line in enumerate(path.read_text().splitlines(), 1)
+        if re.search(r"\brw_\w+", line)
+    ]
+    assert not offenders, "rw_* symbols resurfaced:\n" + "\n".join(offenders)
+
+
+def test_backend_surface_has_no_rw_methods():
+    """No per-layout op variants on the protocol or any registered backend."""
+    for name in available_backends():
+        be = resolve_backend(name)
+        rw = [a for a in dir(be) if a.startswith("rw_")]
+        assert not rw, (name, rw)
 
 
 # ---------------------------------------------------------------------------

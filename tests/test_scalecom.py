@@ -156,19 +156,55 @@ def test_grouped_mode_equals_premean():
     )
 
 
-def test_comm_stats_constant_in_workers():
-    """ScaleCom's payload is O(1) in worker count (Table 1) — the stats the
-    perf model consumes."""
+def test_comm_stats_follow_plan_accounting():
+    """Per-worker payload follows the plan stage's one byte rule (Table 1
+    O(1)-in-n property included): 4B per value each worker, plus the
+    LEADER's 4B-per-index broadcast amortized over the n workers for
+    shared-index compressors — so the payload is bounded by 8k for every n
+    and shrinks toward the 4k values floor as n grows."""
+    from repro.core.plan import payload_bytes
+
     size = 4096
+    k = size // 16
     params = {"w": jnp.zeros((size,))}
-    cfg = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=16), min_size=1)
     payloads = []
     for n in (2, 8):
+        cfg = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=16), min_size=1)
         state = init_state(params, n, min_size=1)
         g = jax.random.normal(jax.random.PRNGKey(n), (n, size))
         _, _, stats = scalecom_reduce({"w": g}, state, cfg)
         payloads.append(float(stats["comm_bytes_per_worker"]))
-    assert payloads[0] == payloads[1]
+        assert payloads[-1] == payload_bytes(cfg.compressor, k, n)
+    assert 4.0 * k <= payloads[1] <= payloads[0] <= 8.0 * k
+    # local_topk ships its own index set per worker: flat 8k at every n;
+    # random_k re-derives indices from the step counter: the 4k floor
+    for name, expect in (("local_topk", 8.0 * k), ("random_k", 4.0 * k)):
+        cfg = ScaleComConfig(compressor=CompressorConfig(name, chunk=16), min_size=1)
+        state = init_state(params, 4, min_size=1)
+        g = jax.random.normal(jax.random.PRNGKey(0), (4, size))
+        _, _, stats = scalecom_reduce({"w": g}, state, cfg)
+        assert float(stats["comm_bytes_per_worker"]) == expect, name
+
+
+def test_contraction_gamma_surfaced_in_both_layouts():
+    """The contraction diagnostic (Theorem 1's gamma) comes out of the unified
+    execute stage for rowwise too — and matches flat exactly when the last
+    dim is a chunk multiple."""
+    n, R, C = 4, 6, 32
+    params = {"w": jnp.zeros((R, C))}
+    g = jax.random.normal(jax.random.PRNGKey(9), (n, R, C))
+    gammas = {}
+    for layout in ("flat", "rowwise"):
+        cfg = ScaleComConfig(
+            compressor=CompressorConfig("clt_k", chunk=8), beta=0.3, min_size=1,
+            layout=layout,
+        )
+        state = init_state(params, n, min_size=1, layout=layout)
+        _, _, stats = scalecom_reduce({"w": g}, state, cfg, compute_stats=True)
+        assert "contraction_gamma" in stats, layout
+        gammas[layout] = float(stats["contraction_gamma"])
+        assert 0.0 <= gammas[layout] < 1.0, (layout, gammas[layout])
+    assert gammas["flat"] == gammas["rowwise"]
 
 
 def test_dense_reduce_is_mean():
@@ -177,48 +213,49 @@ def test_dense_reduce_is_mean():
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(jnp.mean(g["w"], 0)))
 
 
-def test_rowwise_layout_matches_flat():
-    """rowwise chunking is bitwise flat chunking when the last dim is a chunk
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("name", ["clt_k", "true_topk", "local_topk", "random_k"])
+@pytest.mark.parametrize("topm", [1, 2, 4])
+def test_rowwise_layout_matches_flat(name, topm, backend):
+    """rowwise chunking is BITWISE flat chunking when the last dim is a chunk
     multiple (row-major order) — the layout-preserving optimization changes
-    sharding behaviour, never math."""
+    sharding behaviour, never math. The unified plan/execute pipeline makes
+    this hold for every compressor x topm x backend combination: both
+    layouts run the same trailing-axis ops over the same chunk stream."""
     n, R, C = 4, 6, 32  # C % CHUNK == 0
     params = {"w": jnp.zeros((R, C))}
     g = jax.random.normal(jax.random.PRNGKey(3), (n, R, C))
     outs = {}
     for layout in ("flat", "rowwise"):
         cfg = ScaleComConfig(
-            compressor=CompressorConfig("clt_k", chunk=CHUNK), beta=0.3,
-            min_size=1, layout=layout,
+            compressor=CompressorConfig(name, chunk=CHUNK, topm=topm), beta=0.3,
+            min_size=1, layout=layout, backend=backend,
         )
         state = init_state(params, n, min_size=1, layout=layout)
         ghat, state2, _ = jax.jit(lambda g, s: scalecom_reduce(g, s, cfg))({"w": g}, state)
-        ghat2, _, _ = scalecom_reduce({"w": g}, state2,
-                                      dataclasses_replace(cfg))  # second step
+        ghat2, _, _ = scalecom_reduce({"w": g}, state2, cfg)  # second step
         outs[layout] = (np.asarray(ghat["w"]), np.asarray(ghat2["w"]))
-    np.testing.assert_allclose(outs["flat"][0], outs["rowwise"][0], rtol=1e-5, atol=1e-7)
-    np.testing.assert_allclose(outs["flat"][1], outs["rowwise"][1], rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(outs["flat"][0], outs["rowwise"][0])
+    np.testing.assert_array_equal(outs["flat"][1], outs["rowwise"][1])
 
 
-def dataclasses_replace(cfg):
-    return cfg
-
-
+@pytest.mark.parametrize("topm", [1, 2])
 @pytest.mark.parametrize("name", ["clt_k", "true_topk", "random_k", "local_topk"])
-def test_rowwise_all_compressors_run(name):
-    n, R, C = 4, 3, 40  # C not a chunk multiple -> exercises rw padding
+def test_rowwise_all_compressors_run(name, topm):
+    n, R, C = 4, 3, 40  # C not a chunk multiple -> exercises trailing padding
     params = {"w": jnp.zeros((R, C))}
     cfg = ScaleComConfig(
-        compressor=CompressorConfig(name, chunk=16), beta=0.5, min_size=1,
-        layout="rowwise",
+        compressor=CompressorConfig(name, chunk=16, topm=topm), beta=0.5,
+        min_size=1, layout="rowwise",
     )
     state = init_state(params, n, min_size=1, layout="rowwise")
     g = jax.random.normal(jax.random.PRNGKey(0), (n, R, C))
     ghat, state2, _ = scalecom_reduce({"w": g}, state, cfg)
     assert np.isfinite(np.asarray(ghat["w"])).all()
     assert ghat["w"].shape == (R, C)
-    # shared-index compressors: <= 3 nnz per row; local_topk unions across
-    # the n workers (gradient build-up)
-    bound = R * 3 * (4 if name == "local_topk" else 1)
+    # shared-index compressors: <= 3 chunks x topm nnz per row; local_topk
+    # unions across the n workers (gradient build-up)
+    bound = R * 3 * topm * (4 if name == "local_topk" else 1)
     assert int(jnp.sum(ghat["w"] != 0)) <= bound
 
 

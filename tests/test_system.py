@@ -19,9 +19,11 @@ from repro.training.train_step import build_train_step
 
 
 def _residue_matrix(state, path):
+    """Worker-stacked residue as (n, size), whatever the storage layout —
+    the similarity metrics are layout-independent."""
     enc = state.sc_state.residues[path]
-    size = enc["q"].shape[-1]
-    return CODECS["fp32"].decode(enc, (size,))
+    m = CODECS["fp32"].decode(enc, enc["q"].shape[1:])
+    return m.reshape(m.shape[0], -1)
 
 
 def _train(beta, lr, steps, n=4, seed=0):
