@@ -37,6 +37,26 @@ def _backends() -> tuple[str, ...]:
     return ("jnp", "pallas") if pallas_available() else ("jnp",)
 
 
+def _device_tags(backend_name: str) -> dict:
+    """Provenance tags stamped on every record: interpret-mode pallas numbers
+    must never be mistaken for TPU results (they time the interpreter)."""
+    return {
+        "device_kind": jax.devices()[0].device_kind,
+        "jax_backend": jax.default_backend(),
+        "interpret": backend_name == "pallas" and jax.default_backend() != "tpu",
+    }
+
+
+def _interpret_banner() -> None:
+    print(
+        "#" * 72 + "\n"
+        "# WARNING: pallas kernels running in INTERPRET mode on this host —\n"
+        "# the pallas rows below time the interpreter, NOT TPU kernels.\n"
+        "# Run on a TPU (jax.default_backend() == 'tpu') for real numbers.\n"
+        + "#" * 72
+    )
+
+
 def _bench_backend(be, size: int) -> list[dict]:
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (size,))
@@ -90,8 +110,12 @@ def run() -> list[Row]:
     backends = _backends()
     for name in backends:
         be = resolve_backend(name)
+        tags = _device_tags(name)
+        if tags["interpret"]:
+            _interpret_banner()
         for size in SIZES:
             for e in _bench_backend(be, size):
+                e.update(tags)
                 entries.append(e)
                 derived = f"elems_per_us={e['elems_per_us']:.0f}"
                 if e["op"] == "ef_update":
@@ -102,6 +126,7 @@ def run() -> list[Row]:
                     (f"kernels/{e['op']}_{name}_n{size}", e["us_per_call"], derived)
                 )
         for e in _bench_rowwise_topm(be):
+            e.update(tags)
             entries.append(e)
             rows.append(
                 (

@@ -1,0 +1,154 @@
+"""Overlap-aware bucketed reduce sweep: step time + modeled hidden fraction
+vs bucket size x compressor x backend, written to ``BENCH_overlap.json``.
+
+Two kinds of numbers per configuration:
+
+  * measured — wall time of a jitted ``scalecom_reduce`` over a multi-tensor
+    gradient tree, bucketed vs the single-shot launch. On this CPU container
+    the bucketed path cannot actually overlap anything (one device, no real
+    collectives), so the measured column is an overhead check: bucketing +
+    the optimization_barrier token chain should cost ~nothing. Every record
+    is tagged with ``device_kind`` / ``jax_backend`` / ``interpret`` so
+    interpret-mode pallas rows can't be misread as TPU results.
+  * modeled — ``analysis.perfmodel.overlap_timeline`` for the reference
+    transformer config at the same bucket size: hidden fraction, exposed
+    comm, and the speedup of launch granularity alone vs the one-shot
+    reduce (the quantity Agarwal et al. 2021 show dominates real gains).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.analysis.perfmodel import overlap_report, reference_transformer_perf
+from repro.backends import pallas_available, resolve_backend
+from repro.core.compressors import CompressorConfig
+from repro.core.scalecom import ScaleComConfig, scalecom_reduce
+from repro.core.state import init_state
+
+JSON_PATH = os.environ.get("SCALECOM_BENCH_OVERLAP_JSON", "BENCH_overlap.json")
+
+N_WORKERS = 4
+CHUNK = 64
+# ~8 x 128 KB fp32 tensors: enough leaves for multi-bucket schedules on CPU
+TREE_SIZES = tuple(1 << 15 for _ in range(8))
+BUCKET_MBS = (0.0, 0.125, 0.5)  # 0 = unbucketed single-shot launch
+COMPRESSORS = ("clt_k", "local_topk")
+_SCHEME = {"clt_k": "scalecom", "true_topk": "scalecom", "random_k": "scalecom",
+           "local_topk": "local_topk", "none": "none"}
+
+
+def _device_tags(backend_name: str) -> dict:
+    return {
+        "device_kind": jax.devices()[0].device_kind,
+        "jax_backend": jax.default_backend(),
+        "interpret": backend_name == "pallas" and jax.default_backend() != "tpu",
+    }
+
+
+def _measure(backend_name: str, compressor: str, bucket_mb: float) -> float:
+    params = {f"w{i}": jnp.zeros((s,)) for i, s in enumerate(TREE_SIZES)}
+    cfg = ScaleComConfig(
+        compressor=CompressorConfig(compressor, chunk=CHUNK),
+        beta=0.1,
+        min_size=1,
+        backend=backend_name,
+    )
+    state = init_state(params, N_WORKERS, min_size=1)
+    buckets = False if bucket_mb <= 0 else int(bucket_mb * (1 << 20))
+    key = jax.random.PRNGKey(0)
+    grads = {
+        k: jax.random.normal(jax.random.fold_in(key, i), (N_WORKERS,) + v.shape)
+        for i, (k, v) in enumerate(params.items())
+    }
+    fn = jax.jit(lambda g, s: scalecom_reduce(g, s, cfg, buckets=buckets))
+    return time_fn(fn, grads, state)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    entries: list[dict] = []
+    backends = ("jnp", "pallas") if pallas_available() else ("jnp",)
+    ref = reference_transformer_perf()
+
+    for backend_name in backends:
+        resolve_backend(backend_name)  # fail fast if unregistered
+        tags = _device_tags(backend_name)
+        if tags["interpret"]:
+            print(
+                "#" * 72 + "\n"
+                "# WARNING: pallas running in INTERPRET mode — timings below\n"
+                "# measure the interpreter, NOT TPU kernel performance.\n"
+                + "#" * 72
+            )
+        for compressor in COMPRESSORS:
+            for bucket_mb in BUCKET_MBS:
+                us = _measure(backend_name, compressor, bucket_mb)
+                modeled = (
+                    overlap_report(
+                        ref, _SCHEME[compressor], bucket_mb * (1 << 20)
+                    )
+                    if bucket_mb > 0
+                    else {"hidden_fraction": 0.0, "n_buckets": 1}
+                )
+                entry = {
+                    "backend": backend_name,
+                    "compressor": compressor,
+                    "bucket_mb": bucket_mb,
+                    "n_tensors": len(TREE_SIZES),
+                    "bytes_dense": 4 * sum(TREE_SIZES),
+                    "us_per_step": us,
+                    "modeled": modeled,
+                    **tags,
+                }
+                entries.append(entry)
+                label = f"{bucket_mb:g}mb" if bucket_mb > 0 else "off"
+                rows.append(
+                    (
+                        f"overlap/{compressor}_{backend_name}_{label}",
+                        us,
+                        f"hidden_fraction={modeled['hidden_fraction']:.3f};"
+                        f"interpret={tags['interpret']}",
+                    )
+                )
+
+    # the ISSUE-6 reference point: paper transformer, 25 MB buckets
+    ref_report = overlap_report(ref, "scalecom", 25 << 20)
+    entries.append(
+        {
+            "backend": "model",
+            "compressor": "clt_k",
+            "bucket_mb": 25.0,
+            "reference": "paper-transformer-base",
+            "modeled": ref_report,
+            **_device_tags("model"),
+        }
+    )
+    rows.append(
+        (
+            "overlap/reference_transformer_25mb",
+            0.0,
+            f"hidden_fraction={ref_report['hidden_fraction']:.3f};"
+            f"speedup={ref_report['speedup_vs_unbucketed']:.2f}x",
+        )
+    )
+
+    summary = {
+        "device": jax.devices()[0].device_kind,
+        "default_backend": jax.default_backend(),
+        "n_workers": N_WORKERS,
+        "chunk": CHUNK,
+        "entries": entries,
+    }
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(summary, f, indent=1)
+        rows.append(("overlap/bench_json", 0.0, f"path={JSON_PATH}"))
+    except OSError as e:  # read-only checkout: keep the stdout rows
+        rows.append(("overlap/bench_json", 0.0, f"skipped={e.__class__.__name__}"))
+    return rows

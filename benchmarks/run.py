@@ -23,6 +23,7 @@ BENCHES = [
     ("fig6_perfmodel", "benchmarks.bench_fig6_perfmodel"),
     ("rate_sweep", "benchmarks.bench_rate_sweep"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("overlap", "benchmarks.bench_overlap"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -42,9 +42,33 @@ def train(compressor: str, chunk: int = 64, beta: float = 1.0):
     return hist[-1]["loss"]
 
 
+def overlap_preview(bucket_mb: float = 25.0):
+    """The overlap-aware bucketed launch: what `--bucket-mb` buys.
+
+    The full trainer enables it with
+
+        PYTHONPATH=src python -m repro.launch.train --bucket-mb 25
+
+    (or `SCALECOM_BUCKET_MB=25` in the environment; `--no-overlap` keeps the
+    buckets but drops the ordering hints). Here we just print the modeled
+    timeline for the paper's transformer: how much of the compressed
+    all-reduce hides behind backward compute at this bucket size.
+    """
+    from repro.analysis.perfmodel import overlap_report, reference_transformer_perf
+
+    rep = overlap_report(reference_transformer_perf(), "scalecom",
+                         int(bucket_mb * (1 << 20)))
+    print(f"\n--- overlap model: transformer-base, --bucket-mb {bucket_mb:g} ---")
+    print(f"buckets={rep['n_buckets']}  "
+          f"hidden_fraction={rep['hidden_fraction']:.2f}  "
+          f"exposed_comm={rep['exposed_comm'] * 1e3:.2f}ms  "
+          f"speedup_vs_one_shot={rep['speedup_vs_unbucketed']:.2f}x")
+
+
 if __name__ == "__main__":
     dense = train("none")
     scalecom = train("clt_k", chunk=64, beta=1.0)
     print(f"\nfinal loss  dense={dense:.4f}  scalecom(64x)={scalecom:.4f}  "
           f"gap={scalecom - dense:+.4f}")
     print("ScaleCom trains to ~baseline loss while all-reducing 64x fewer bytes.")
+    overlap_preview()

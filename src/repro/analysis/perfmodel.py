@@ -21,14 +21,31 @@ with gradient payloads:
 Numbers reproduce the paper's qualitative claims: local top-k speedup decays
 from ~1.9x to ~1.2x as n grows 8->128 while ScaleCom holds ~2x (Fig. 6b /
 Appendix F.1), and comm fraction drops 56%->20% when minibatch goes 8->32.
+
+Beyond the per-step byte count, ``overlap_timeline`` models the bucketed
+launch (core.plan.plan_buckets + core.overlap): gradients become ready
+progressively through backward, each bucket's compress + all-reduce occupies
+the (serialized) link as soon as its bytes exist, and whatever outlasts the
+backward pass is *exposed* communication. The headline numbers are
+``hidden_fraction`` (share of comm time overlapped with compute — Agarwal et
+al. 2021's missing term) and ``exposed_comm``; benchmarks/bench_overlap.py
+sweeps them over bucket size x compressor and tests/test_overlap.py pins the
+reference-transformer figure.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List
 
-__all__ = ["PerfConfig", "step_time", "fig6_sweep"]
+__all__ = [
+    "PerfConfig",
+    "step_time",
+    "fig6_sweep",
+    "overlap_timeline",
+    "overlap_report",
+    "reference_transformer_perf",
+]
 
 GRAD_BYTES = 4
 
@@ -43,6 +60,10 @@ class PerfConfig:
     workers: int = 8
     compression: float = 112.0
     topology: str = "ps"  # ps | ring
+    # overlap-timeline knobs (overlap_timeline only; step_time ignores them)
+    hbm_bw: float = 900e9  # bytes/s device memory bandwidth (compress passes)
+    bwd_fraction: float = 2.0 / 3.0  # backward share of the fwd+bwd flops
+    compress_passes: float = 3.0  # HBM passes/byte of the fused compress path
 
 
 def _comm_bytes(cfg: PerfConfig, scheme: str) -> float:
@@ -103,6 +124,135 @@ def step_time(cfg: PerfConfig, scheme: str) -> Dict[str, float]:
         "t_comm": t_comm,
         "t_total": total,
         "comm_fraction": t_comm / total,
+    }
+
+
+# ---------------------------------------------------------------------------
+# overlap-aware bucketed timeline
+# ---------------------------------------------------------------------------
+
+
+def reference_transformer_perf(**overrides) -> PerfConfig:
+    """The paper's Transformer-base (WMT14, ~65M params) on the Fig. 6 rig.
+
+    flops_per_sample: 2*P FLOPs/token forward at seq 128, x3 for fwd+bwd —
+    the config whose modeled hidden fraction the tests pin (>= 0.5 at the
+    default 25 MB buckets).
+    """
+    params = 65e6
+    base = dict(
+        params=params,
+        flops_per_sample=2.0 * params * 128 * 3,
+        peak_flops=100e12,
+        bandwidth=32e9,
+        minibatch=8,
+        workers=8,
+        compression=112.0,
+    )
+    base.update(overrides)
+    return PerfConfig(**base)
+
+
+def overlap_timeline(
+    cfg: PerfConfig, scheme: str = "scalecom", bucket_bytes: float = 25 << 20
+) -> Dict:
+    """Model one bucketed step: per-bucket compress/link occupancy vs compute.
+
+    The timeline (all times seconds from step start):
+
+      * forward runs [0, t_fwd); backward runs [t_fwd, t_compute) and
+        produces gradient bytes at a uniform rate, so bucket i (packed in
+        grad-ready order) is READY once its cumulative dense bytes have been
+        produced;
+      * compress for a bucket costs ``compress_passes`` HBM passes over its
+        dense bytes at ``hbm_bw`` (the fused select/EF/scatter path);
+      * the link is SERIALIZED in schedule order (collectives must issue in
+        the same order on every rank): bucket i's comm starts at
+        max(ready_i + compress_i, comm_end_{i-1}) and occupies the link for
+        its share of the unbucketed ``step_time`` comm (per-bucket comm
+        scales with dense bytes, so the total equals the unbucketed model).
+
+    Exposed comm is whatever the pipeline still owes after backward finishes:
+    t_step = max(t_compute, comm_end_last), exposed = t_step - t_compute,
+    hidden_fraction = 1 - exposed / pipeline where pipeline = total compress
+    + comm time. The unbucketed path is the degenerate single bucket, ready
+    only at t_compute: everything exposed, hidden_fraction 0.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    G = cfg.params * GRAD_BYTES
+    t_comp = cfg.flops_per_sample * cfg.minibatch / cfg.peak_flops
+    t_fwd = (1.0 - cfg.bwd_fraction) * t_comp
+    t_bwd = cfg.bwd_fraction * t_comp
+    t_comm_total = step_time(cfg, scheme)["t_comm"]
+
+    # dense-byte split: full buckets + remainder (core.plan packs by dense bytes)
+    sizes: List[float] = []
+    left = G
+    while left > 0:
+        sizes.append(min(bucket_bytes, left))
+        left -= bucket_bytes
+
+    rows = []
+    cum = 0.0
+    comm_free = 0.0  # when the link frees up
+    t_compress_total = 0.0
+    for i, b in enumerate(sizes):
+        cum += b
+        ready = t_fwd + t_bwd * (cum / G)
+        t_compress = cfg.compress_passes * b / cfg.hbm_bw
+        t_comm = t_comm_total * (b / G)
+        start = max(ready + t_compress, comm_free)
+        comm_free = start + t_comm
+        t_compress_total += t_compress
+        rows.append(
+            {
+                "bucket": i,
+                "bytes_dense": b,
+                "ready": ready,
+                "t_compress": t_compress,
+                "comm_start": start,
+                "comm_end": comm_free,
+            }
+        )
+
+    t_step = max(t_comp, comm_free)
+    exposed = t_step - t_comp
+    pipeline = t_comm_total + t_compress_total
+    hidden = 1.0 - exposed / pipeline if pipeline > 0 else 1.0
+    return {
+        "scheme": scheme,
+        "bucket_bytes": float(bucket_bytes),
+        "n_buckets": len(sizes),
+        "t_compute": t_comp,
+        "t_comm_total": t_comm_total,
+        "t_compress_total": t_compress_total,
+        "t_step": t_step,
+        "exposed_comm": exposed,
+        "hidden_fraction": max(0.0, min(1.0, hidden)),
+        "buckets": rows,
+    }
+
+
+def overlap_report(
+    cfg: PerfConfig, scheme: str = "scalecom", bucket_bytes: float = 25 << 20
+) -> Dict[str, float]:
+    """Headline overlap numbers: bucketed vs the one-shot (unbucketed) launch.
+
+    The unbucketed baseline is the whole gradient tree as a single bucket
+    that only becomes ready when backward completes — the pre-bucketing
+    ``scalecom_reduce`` behavior — so ``speedup_vs_unbucketed`` is the
+    wall-clock win of launch granularity alone.
+    """
+    tl = overlap_timeline(cfg, scheme, bucket_bytes)
+    un = overlap_timeline(cfg, scheme, bucket_bytes=cfg.params * GRAD_BYTES)
+    return {
+        "hidden_fraction": tl["hidden_fraction"],
+        "exposed_comm": tl["exposed_comm"],
+        "t_step": tl["t_step"],
+        "t_step_unbucketed": un["t_step"],
+        "speedup_vs_unbucketed": un["t_step"] / tl["t_step"],
+        "n_buckets": tl["n_buckets"],
     }
 
 

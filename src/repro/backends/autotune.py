@@ -74,12 +74,20 @@ def _key(op: str, chunk: int, dtype, n_chunks: int) -> str:
 
 
 def _load() -> Dict[str, int]:
+    """Read the on-disk cache into the in-process mirror.
+
+    Tolerant of a corrupt/truncated/mistyped JSON file (e.g. a concurrent
+    writer on a filesystem without atomic rename, or a hand-edit gone wrong):
+    any parse failure degrades to an empty cache — ``best_block_chunks``
+    falls back to the kernel default and ``autotune`` re-sweeps — instead of
+    poisoning every launch with an exception.
+    """
     global _cache
     if _cache is None:
         try:
             with open(cache_path()) as f:
-                _cache = {k: int(v) for k, v in json.load(f).items()}
-        except (OSError, ValueError):
+                _cache = {str(k): int(v) for k, v in json.load(f).items()}
+        except (OSError, ValueError, TypeError, AttributeError):
             _cache = {}
     return _cache
 
@@ -90,8 +98,15 @@ def _store(key: str, block: int) -> None:
     path = cache_path()
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        with open(path, "w") as f:
+        # Atomic publish: write a private temp file, then os.replace it over
+        # the cache. Concurrent training processes sharing
+        # $SCALECOM_AUTOTUNE_CACHE then never observe a truncated JSON —
+        # last-writer-wins on whole files, and readers either see the old
+        # complete cache or the new complete cache.
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
     except OSError:
         pass  # read-only FS: keep the in-process cache only
 

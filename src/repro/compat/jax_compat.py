@@ -50,6 +50,8 @@ __all__ = [
     "tree_map_with_path",
     "axis_size",
     "psum_scatter",
+    "has_optimization_barrier",
+    "optimization_barrier",
     "has_float8",
     "float8_e4m3_dtype",
     "float8_itemsize",
@@ -182,6 +184,33 @@ def psum_scatter(x, axis_name: str, *, scatter_dimension: int = 0, tiled: bool =
 
 
 # ---------------------------------------------------------------------------
+# scheduling barriers
+# ---------------------------------------------------------------------------
+
+
+def has_optimization_barrier() -> bool:
+    """True when this jax ships ``jax.lax.optimization_barrier``.
+
+    The overlap-aware bucketed reduce (core.overlap) uses the barrier to pin
+    the launch order of per-bucket collectives; when the primitive is absent
+    the scheduler degrades to the synchronous (unordered) trace, which is
+    bitwise identical — only the scheduling hint is lost.
+    """
+    return hasattr(jax.lax, "optimization_barrier")
+
+
+def optimization_barrier(tree):
+    """``jax.lax.optimization_barrier`` with an identity fallback.
+
+    The barrier is a value-level identity either way: it never changes
+    numerics, only forbids XLA from reordering/DCE-ing computation across it.
+    """
+    if has_optimization_barrier():
+        return jax.lax.optimization_barrier(tree)
+    return tree
+
+
+# ---------------------------------------------------------------------------
 # float8 guards
 # ---------------------------------------------------------------------------
 
@@ -228,5 +257,5 @@ def describe() -> str:
     return (
         f"jax {jax.__version__} | AxisType={has_axis_type()} "
         f"set_mesh={hasattr(jax, 'set_mesh')} shard_map={hasattr(jax, 'shard_map')} "
-        f"float8={has_float8()}"
+        f"float8={has_float8()} opt_barrier={has_optimization_barrier()}"
     )

@@ -94,23 +94,33 @@ def compression_rate(cfg: CompressorConfig) -> float:
     return cfg.rate
 
 
+# Warn-once latch for the use_kernel deprecation: the resolver runs on every
+# reduce call (once per step in eager loops), and per-call DeprecationWarnings
+# are pure log noise over a long run. Tests reset this to re-assert the warning.
+_use_kernel_warned = False
+
+
 def resolve_backend_with_deprecation(cfg: CompressorConfig, spec="auto"):
     """Resolve a backend spec, honouring the deprecated use_kernel flag.
 
     The single home of the use_kernel -> pallas mapping (shared with
-    scalecom._resolve_cfg_backend): when the flag is set it warns and maps an
-    "auto"/None spec onto "pallas"; an explicit spec always wins.
+    scalecom._resolve_cfg_backend): when the flag is set it warns (once per
+    process) and maps an "auto"/None spec onto "pallas"; an explicit spec
+    always wins.
     """
     from repro.backends import resolve_backend
 
     if cfg.use_kernel:
-        warnings.warn(
-            "CompressorConfig.use_kernel is deprecated; set "
-            'ScaleComConfig(backend="pallas") (or pass backend= explicitly). '
-            "Mapping use_kernel=True onto the pallas backend.",
-            DeprecationWarning,
-            stacklevel=3,
-        )
+        global _use_kernel_warned
+        if not _use_kernel_warned:
+            _use_kernel_warned = True
+            warnings.warn(
+                "CompressorConfig.use_kernel is deprecated; set "
+                'ScaleComConfig(backend="pallas") (or pass backend= explicitly). '
+                "Mapping use_kernel=True onto the pallas backend.",
+                DeprecationWarning,
+                stacklevel=3,
+            )
         if spec is None or spec == "auto":
             spec = "pallas"
     return resolve_backend(spec)

@@ -60,7 +60,7 @@ from repro.core.state import resolve_layout, storage_shape
 
 Shape = Tuple[int, ...]
 
-__all__ = ["TensorPlan", "plan_tensors", "payload_bytes"]
+__all__ = ["TensorPlan", "Bucket", "plan_tensors", "plan_buckets", "payload_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +171,75 @@ def _plan_cached(
         )
         for path, shape, n_stack in leaves
     )
+
+
+# ---------------------------------------------------------------------------
+# bucketing — the launch-granularity stage of the overlap-aware reduce
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One launch unit of the bucketed reduce (core.overlap schedules these).
+
+    leaf_ids:      indices into the plan/leaf tuple, in REVERSE leaf order —
+                   reverse-autodiff produces gradients for the LAST parameters
+                   first, so packing reversed leaves keeps each bucket's
+                   tensors becoming ready together and lets the first bucket's
+                   compress+all-reduce launch while earlier layers are still
+                   in backward.
+    bytes_dense:   summed dense gradient bytes (the packing target —
+                   bucket_bytes bounds THIS, mirroring DDP's bucket_cap_mb;
+                   payload bytes vary per compressor and would make bucket
+                   geometry depend on rate rules).
+    bytes_payload: summed per-worker wire bytes (feeds the overlap timeline
+                   in analysis.perfmodel).
+    """
+
+    index: int
+    leaf_ids: Tuple[int, ...]
+    bytes_dense: float
+    bytes_payload: float
+
+
+@functools.lru_cache(maxsize=128)
+def _buckets_cached(
+    plans: Tuple[TensorPlan, ...], bucket_bytes: int
+) -> Tuple[Bucket, ...]:
+    order = range(len(plans) - 1, -1, -1)  # grad-ready (reverse leaf) order
+    buckets = []
+    ids: list = []
+    acc_dense = acc_payload = 0.0
+    for i in order:
+        p = plans[i]
+        if ids and acc_dense + p.bytes_dense > bucket_bytes:
+            buckets.append(Bucket(len(buckets), tuple(ids), acc_dense, acc_payload))
+            ids, acc_dense, acc_payload = [], 0.0, 0.0
+        ids.append(i)
+        acc_dense += p.bytes_dense
+        acc_payload += p.bytes_payload
+    if ids:
+        buckets.append(Bucket(len(buckets), tuple(ids), acc_dense, acc_payload))
+    return tuple(buckets)
+
+
+def plan_buckets(
+    plans: Tuple[TensorPlan, ...], bucket_bytes: int
+) -> Tuple[Bucket, ...]:
+    """Pack TensorPlans into size-targeted launch buckets (cached).
+
+    Greedy first-fit in reverse-autodiff grad-ready order: a bucket closes
+    when adding the next tensor would push its summed *dense* bytes past
+    ``bucket_bytes``. Every tensor lands in exactly one bucket — dense
+    fallbacks and rate-rule tensors ride along in grad order (a dense reduce
+    is still a collective worth overlapping); a tensor larger than
+    ``bucket_bytes`` gets a bucket of its own. Bucketing changes launch
+    granularity ONLY: per-tensor plans (and therefore the reduce numerics)
+    are untouched, which is what keeps bucketed ≡ unbucketed bitwise.
+    """
+    if bucket_bytes <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    return _buckets_cached(tuple(plans), int(bucket_bytes))
 
 
 def plan_tensors(

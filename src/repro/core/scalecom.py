@@ -35,6 +35,14 @@ The reduce is ONE layout-aware pipeline:
            combination: clt_k / true_topk / local_topk / random_k, any
            ``topm``, rate rules, and ``groups`` behave identically in both
            layouts.
+  launch   (core.plan.plan_buckets + core.overlap) — optional overlap-aware
+           bucketed launch: tensors pack into size-targeted buckets in
+           reverse-autodiff grad-ready order and each bucket's compress +
+           all-reduce is staged behind an optimization_barrier token chain,
+           so XLA can hide per-bucket collectives behind remaining backward
+           compute. Launch granularity only — bitwise identical to the
+           single-shot path (``scalecom_reduce(..., buckets=...)``; default
+           "auto" probes $SCALECOM_BUCKET_MB, the bucketed CI leg).
 
 Two chunk layouts (ScaleComConfig.layout):
 
@@ -82,6 +90,7 @@ from repro.core.compressors import (
     resolve_backend_with_deprecation,
     select_indices,
 )
+from repro.core import overlap
 from repro.core.filter import lowpass_update
 from repro.core.plan import TensorPlan, plan_tensors
 from repro.core.state import CODECS, ScaleComState, codec_key
@@ -114,6 +123,16 @@ class ScaleComConfig:
                     worker. G < n enables hierarchical mode.
     warmup_steps:   steps of dense reduction before compression kicks in
                     (applied statically by the train loop).
+    bucket_bytes:   dense-byte target per launch bucket of the overlap-aware
+                    bucketed reduce (core.plan.plan_buckets; 25 MB default —
+                    DDP's bucket_cap_mb heritage). Whether bucketing is ON is
+                    the ``buckets`` argument of ``scalecom_reduce`` (default
+                    "auto": the $SCALECOM_BUCKET_MB env var).
+    overlap:        thread the optimization_barrier token chain through the
+                    bucketed launch so XLA can interleave per-bucket
+                    collectives with remaining backward compute (core.overlap);
+                    False forces the synchronous per-bucket fallback. No
+                    effect on numerics either way.
     """
 
     compressor: CompressorConfig = CompressorConfig()
@@ -124,9 +143,20 @@ class ScaleComConfig:
     backend: Any = "auto"
     groups: Optional[int] = None
     warmup_steps: int = 0
+    bucket_bytes: int = 25 << 20
+    overlap: bool = True
     # per-tensor compression-rate rules (paper §4 guidance); first match wins,
     # chunk=None => dense. Tuple of core.rates.RateRule.
     rate_rules: Tuple = ()
+
+    def __post_init__(self):
+        # fail fast at config construction, not deep inside a traced reduce
+        if self.bucket_bytes <= 0:
+            raise ValueError(
+                f"bucket_bytes must be positive, got {self.bucket_bytes} "
+                "(bucketing is toggled by scalecom_reduce(buckets=...) / "
+                "$SCALECOM_BUCKET_MB, not by zeroing the size)"
+            )
 
     def n_workers(self, data_ranks: int) -> int:
         return self.groups if self.groups is not None else data_ranks
@@ -242,10 +272,19 @@ def scalecom_reduce(
     cfg: ScaleComConfig,
     *,
     compute_stats: bool = False,
+    buckets: Any = None,
 ) -> Tuple[Pytree, ScaleComState, Dict[str, Array]]:
     """Run Algorithm 1 on worker-stacked gradients.
 
     grads_pw: pytree of (n_workers, *shape) arrays (unreduced).
+    buckets:  launch granularity of the overlap-aware bucketed reduce
+              (core.overlap.resolve_buckets): None/"auto" probes
+              $SCALECOM_BUCKET_MB, False forces the single-shot path, True
+              buckets at cfg.bucket_bytes, an int is an explicit byte target,
+              and a tuple of core.plan.Bucket is a pre-built schedule.
+              Bucketing changes launch order/granularity ONLY — same
+              per-tensor plans, same EF residues, bitwise-identical output
+              (tests/test_overlap.py).
     Returns (ghat, new_state, stats) where ghat matches the *un-stacked* param
     shapes and is identical on every worker (it came out of an all-reduce).
     """
@@ -261,32 +300,66 @@ def scalecom_reduce(
         frozenset(state.residues),
     )
     t = state.t
+
+    def _run_leaf(i: int, g: Array):
+        """One tensor through Algorithm 1 -> (ghat_leaf, new_enc, stat_sums).
+
+        stat_sums are the (sq_err, sq_all) contraction-gamma contributions,
+        computed on the fp32 ghat before the output cast.
+        """
+        plan = plans[i]
+        gw = _group_fold(g.astype(jnp.float32), plan.groups)
+        if plan.dense:
+            ghat = jnp.mean(gw, axis=0).reshape(plan.shape)
+            return ghat.astype(g.dtype), None, None
+        ghat, new_enc, ef_mean = _execute(
+            plan, gw, state.residues[plan.path], codec, cfg.beta, t,
+            codec_key(plan.path, t), backend, compute_stats,
+        )
+        sums = None
+        if compute_stats:
+            sums = (jnp.sum((ef_mean - ghat) ** 2), jnp.sum(ef_mean**2))
+        return ghat.astype(g.dtype), new_enc, sums
+
+    schedule = overlap.resolve_buckets(buckets, cfg, plans)
+    results: list = [None] * len(flat)
+    if schedule is None:
+        for i, (_, g) in enumerate(flat):
+            results[i] = _run_leaf(i, g)
+    else:
+        # Bucketed launch in grad-ready order: stage each bucket's leaves
+        # behind the previous bucket's fence so per-bucket collectives issue
+        # in schedule order and XLA can overlap them with remaining backward
+        # compute (core.overlap). Identity on values.
+        token = overlap.init_token()
+        for b in schedule:
+            leaves, token = overlap.stage_bucket(
+                [flat[i][1] for i in b.leaf_ids], token, overlap=cfg.overlap
+            )
+            outs = [_run_leaf(i, g) for i, g in zip(b.leaf_ids, leaves)]
+            for i, out in zip(b.leaf_ids, outs):
+                results[i] = out
+            token = overlap.fence_bucket(
+                [out[0] for out in outs], token, overlap=cfg.overlap
+            )
+
+    # Accumulation runs in LEAF order regardless of launch schedule, so the
+    # bucketed and unbucketed paths build identical output graphs.
     new_residues = dict(state.residues)
     ghat_leaves = []
     bytes_sent = 0.0  # per-worker payload under the plan's one byte rule
     bytes_dense = 0.0
     sq_err = 0.0
     sq_all = 0.0
-
-    for plan, (_, g) in zip(plans, flat):
+    for plan, (ghat, new_enc, sums) in zip(plans, results):
         bytes_dense += plan.bytes_dense
         bytes_sent += plan.bytes_payload
-        gw = _group_fold(g.astype(jnp.float32), plan.groups)
-
-        if plan.dense:
-            ghat = jnp.mean(gw, axis=0).reshape(plan.shape)
-            ghat_leaves.append(ghat.astype(g.dtype))
-            continue
-
-        ghat, new_enc, ef_mean = _execute(
-            plan, gw, state.residues[plan.path], codec, cfg.beta, t,
-            codec_key(plan.path, t), backend, compute_stats,
-        )
-        new_residues[plan.path] = new_enc
-        ghat_leaves.append(ghat.astype(g.dtype))
-        if compute_stats:
-            sq_err = sq_err + jnp.sum((ef_mean - ghat) ** 2)
-            sq_all = sq_all + jnp.sum(ef_mean**2)
+        ghat_leaves.append(ghat)
+        if new_enc is not None:
+            new_residues[plan.path] = new_enc
+        if sums is not None:
+            sq_err = sq_err + sums[0]
+            sq_all = sq_all + sums[1]
 
     ghat_tree = jax.tree_util.tree_unflatten(treedef, ghat_leaves)
     new_state = ScaleComState(residues=new_residues, t=t + 1)

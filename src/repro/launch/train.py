@@ -52,6 +52,17 @@ def main(argv=None):
                     help="sweep Pallas tile geometry for this model's tensor "
                          "sizes and persist winners to the autotune cache "
                          "before training (see repro.backends.autotune)")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="overlap-aware bucketed reduce: pack tensors into "
+                         "~this many MB per launch bucket (core.overlap) so "
+                         "per-bucket compress+all-reduce can hide behind "
+                         "backward compute. Default: $SCALECOM_BUCKET_MB if "
+                         "set, else unbucketed; 0 forces unbucketed")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="keep the bucketed launch but drop the "
+                         "optimization_barrier ordering hints (the "
+                         "synchronous per-bucket fallback; numerics are "
+                         "identical either way)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -68,6 +79,17 @@ def main(argv=None):
               "residues fall back to emulated e4m3 (bf16 storage)")
 
     model = build_model(cfg, compute_dtype="float32", loss_chunk=64)
+    # --bucket-mb: None -> "auto" ($SCALECOM_BUCKET_MB probe), 0 -> force the
+    # unbucketed single-shot reduce, > 0 -> bucketed at that size
+    if args.bucket_mb is None:
+        buckets = None
+        bucket_bytes = ScaleComConfig.bucket_bytes
+    elif args.bucket_mb <= 0:
+        buckets = False
+        bucket_bytes = ScaleComConfig.bucket_bytes
+    else:
+        buckets = True
+        bucket_bytes = int(args.bucket_mb * (1 << 20))
     sc_cfg = ScaleComConfig(
         compressor=CompressorConfig(args.compressor, chunk=args.chunk),
         beta=args.beta,
@@ -76,6 +98,8 @@ def main(argv=None):
         groups=args.groups,
         backend=args.backend,
         warmup_steps=args.warmup_steps,
+        bucket_bytes=bucket_bytes,
+        overlap=not args.no_overlap,
     )
     opt = make_optimizer(args.optimizer)
     sched = schedule.linear_warmup(schedule.constant(args.lr), args.warmup_steps)
@@ -99,7 +123,7 @@ def main(argv=None):
         model=model, optimizer=opt, schedule=sched, sc_cfg=sc_cfg,
         n_workers=args.workers, checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=max(args.steps // 2, 1) if args.checkpoint_dir else 0,
-        log_every=args.log_every,
+        log_every=args.log_every, buckets=buckets,
     )
     batches = make_batches(
         cfg.vocab, args.workers, args.local_batch, args.seq, seed=args.seed,

@@ -34,6 +34,9 @@ class TrainLoop:
     checkpoint_every: int = 0
     log_every: int = 10
     compute_stats: bool = False
+    # overlap-aware bucketed reduce launch spec (scalecom_reduce buckets=...);
+    # None/"auto" probes $SCALECOM_BUCKET_MB at trace time
+    buckets: Any = None
 
     def __post_init__(self):
         common = dict(
@@ -41,6 +44,7 @@ class TrainLoop:
             worker_axis=self.worker_axis,
             grad_clip=self.grad_clip,
             compute_stats=self.compute_stats,
+            buckets=self.buckets,
         )
         self._dense = jax.jit(
             build_train_step(self.model, self.optimizer, self.schedule,

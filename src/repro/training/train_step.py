@@ -76,10 +76,19 @@ def build_train_step(
     microbatches: int = 1,
     grad_clip: Optional[float] = None,
     compute_stats: bool = False,
+    buckets: Any = None,
 ) -> Callable[[TrainState, Pytree], Tuple[TrainState, Dict[str, Array]]]:
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch: worker-stacked {"tokens": (n, B, S), ...}.
+
+    buckets selects the launch granularity of the ScaleCom reduce (see
+    scalecom_reduce): the default None/"auto" probes $SCALECOM_BUCKET_MB at
+    trace time; an explicit value (False / True / bytes / a prebuilt bucket
+    tuple) wins. With bucketing on, each bucket's compress + all-reduce is
+    staged in reverse-autodiff grad-ready order behind an
+    optimization_barrier token chain, so XLA's scheduler can overlap the
+    per-bucket collectives with the rest of backward — numerics unchanged.
 
     worker_shardings pins the expanded params AND the per-worker gradient
     cotangents to (worker_axis, *param_sharding). Without the explicit
@@ -173,7 +182,8 @@ def build_train_step(
         if mode == "scalecom":
             loss, auxs, gpw = per_worker_grads(state.params, batch)
             ghat, sc_state, stats = scalecom_reduce(
-                gpw, state.sc_state, sc_cfg, compute_stats=compute_stats
+                gpw, state.sc_state, sc_cfg, compute_stats=compute_stats,
+                buckets=buckets,
             )
             ghat = _pin_reduced(ghat)
         elif mode == "dense":

@@ -9,6 +9,9 @@ SCALECOM_BACKEND env var, the deprecated use_kernel flag) is pure-python and
 tested directly.
 """
 
+import json
+import os
+
 import numpy as np
 import pytest
 
@@ -66,6 +69,23 @@ def test_auto_env_var_wins(monkeypatch):
     assert isinstance(resolve_backend("auto"), JnpBackend)
 
 
+def test_invalid_env_value_names_registered_set(monkeypatch):
+    """A typo'd $SCALECOM_BACKEND must fail loudly, listing what exists."""
+    monkeypatch.setenv("SCALECOM_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="unknown kernel backend") as err:
+        resolve_backend("auto")
+    msg = str(err.value)
+    assert "jnp" in msg and "pallas" in msg
+
+
+def test_explicit_backend_wins_over_env(monkeypatch):
+    monkeypatch.setenv("SCALECOM_BACKEND", "pallas")
+    assert isinstance(resolve_backend("jnp"), JnpBackend)
+    # even a garbage env var is ignored when the config is explicit
+    monkeypatch.setenv("SCALECOM_BACKEND", "cuda")
+    assert isinstance(resolve_backend("jnp"), JnpBackend)
+
+
 def test_auto_without_tpu_is_jnp(monkeypatch):
     monkeypatch.delenv("SCALECOM_BACKEND", raising=False)
     # this container is CPU-only, so the TPU probe must fall through to jnp
@@ -88,7 +108,10 @@ def test_pallas_backend_requires_pallas(monkeypatch):
         PallasBackend()
 
 
-def test_use_kernel_deprecation_maps_to_pallas():
+def test_use_kernel_deprecation_maps_to_pallas(monkeypatch):
+    from repro.core import compressors as comp_mod
+
+    monkeypatch.setattr(comp_mod, "_use_kernel_warned", False)
     ef = _rand((2, 256), 0)
     cfg = CompressorConfig("clt_k", chunk=16, use_kernel=True)
     with pytest.warns(DeprecationWarning, match="use_kernel is deprecated"):
@@ -97,6 +120,26 @@ def test_use_kernel_deprecation_maps_to_pallas():
                    backend=JNP)
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref[1]))
     np.testing.assert_allclose(np.asarray(dense), np.asarray(ref[2]), rtol=1e-6)
+
+
+def test_use_kernel_deprecation_warns_once_per_process(monkeypatch):
+    """The warning is a one-shot latch: warn-on-every-call was pure log noise
+    over a long run (the resolver fires once per reduce call)."""
+    import warnings as _warnings
+
+    from repro.core import compressors as comp_mod
+
+    monkeypatch.setattr(comp_mod, "_use_kernel_warned", False)
+    cfg = CompressorConfig("clt_k", chunk=16, use_kernel=True)
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        comp_mod.resolve_backend_with_deprecation(cfg)
+        comp_mod.resolve_backend_with_deprecation(cfg)
+        comp_mod.resolve_backend_with_deprecation(cfg)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    # the mapping itself still applies on every call, silently
+    assert isinstance(comp_mod.resolve_backend_with_deprecation(cfg), PallasBackend)
 
 
 # ---------------------------------------------------------------------------
@@ -398,3 +441,52 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
 def test_autotune_rejects_unknown_op():
     with pytest.raises(ValueError, match="op must be one of"):
         autotune.autotune("softmax", size=64, chunk=16)
+
+
+@pytest.mark.parametrize(
+    "garbage", ['{"k": 128', "", "[1, 2, 3]", '"a bare string"', "\x00\x01"]
+)
+def test_autotune_tolerates_corrupt_cache(tmp_path, monkeypatch, garbage):
+    """A truncated / mistyped / binary-garbage cache file must degrade to an
+    empty cache (kernel-default reads, re-sweep on autotune), never raise."""
+    cache = tmp_path / "autotune.json"
+    cache.write_text(garbage)
+    monkeypatch.setenv("SCALECOM_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    try:
+        from repro.kernels.chunk_topk import BLOCK_CHUNKS
+
+        assert autotune.best_block_chunks("select", 64, 16, jnp.float32) == BLOCK_CHUNKS
+        # the explicit write path re-sweeps and republishes a valid cache
+        best = autotune.autotune(
+            "select", size=256, chunk=16, candidates=(64,), iters=1
+        )
+        assert best == 64
+        assert isinstance(json.loads(cache.read_text()), dict)
+    finally:
+        autotune.clear_cache()
+
+
+def test_autotune_store_is_atomic(tmp_path, monkeypatch):
+    """The publish is temp-file + os.replace: no partially-written cache is
+    ever visible at the cache path, and no temp litter survives."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("SCALECOM_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    try:
+        replaced = []
+        real_replace = os.replace
+
+        def spy(src, dst):
+            # at replace time the temp file already holds COMPLETE json
+            assert isinstance(json.loads(open(src).read()), dict)
+            replaced.append((src, dst))
+            real_replace(src, dst)
+
+        monkeypatch.setattr(autotune.os, "replace", spy)
+        autotune.autotune("select", size=256, chunk=16, candidates=(64,), iters=1)
+        assert replaced and replaced[-1][1] == str(cache)
+        assert json.loads(cache.read_text())  # final file is whole
+        assert os.listdir(tmp_path) == ["autotune.json"]  # no tmp litter
+    finally:
+        autotune.clear_cache()

@@ -109,6 +109,24 @@ def test_resolve_layout_env_probe(monkeypatch):
         resolve_layout("diagonal")
 
 
+def test_resolve_layout_invalid_env_value_names_valid_set(monkeypatch):
+    """A typo'd $SCALECOM_LAYOUT must fail loudly AND name the valid set —
+    not silently fall back to flat and quietly change the wire format."""
+    monkeypatch.setenv("SCALECOM_LAYOUT", "diagonal")
+    with pytest.raises(ValueError, match="unknown chunk layout") as err:
+        resolve_layout("auto")
+    msg = str(err.value)
+    assert "flat" in msg and "rowwise" in msg and "SCALECOM_LAYOUT" in msg
+
+
+def test_resolve_layout_explicit_wins_over_env(monkeypatch):
+    monkeypatch.setenv("SCALECOM_LAYOUT", "flat")
+    assert resolve_layout("rowwise") == "rowwise"
+    # even a garbage env var is ignored when the config is explicit
+    monkeypatch.setenv("SCALECOM_LAYOUT", "diagonal")
+    assert resolve_layout("rowwise") == "rowwise"
+
+
 def test_layout_env_threads_through_plan(monkeypatch):
     monkeypatch.setenv("SCALECOM_LAYOUT", "rowwise")
     cfg = ScaleComConfig(compressor=CompressorConfig("clt_k", chunk=16), min_size=1)
