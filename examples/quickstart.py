@@ -3,6 +3,11 @@ compare against the uncompressed baseline — the paper's Table-2 experiment in
 ~2 minutes on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Hacking on the repo? The static invariant checker (compat boundary, tracer
+hygiene, wire-byte coverage, collective schedule) is
+``PYTHONPATH=src python -m repro.analysis.scalecheck`` — see ROADMAP.md
+"Static checks".
 """
 
 import sys

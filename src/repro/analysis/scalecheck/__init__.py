@@ -1,0 +1,26 @@
+"""scalecheck — the repo's static invariant checker (AST + jaxpr engines).
+
+Programmatic surface:
+
+    from repro.analysis import scalecheck
+    findings = scalecheck.run(["src/repro"])                  # all rules
+    findings = scalecheck.run(["src"], rules=["no-rw-surface"])
+
+CLI: ``python -m repro.analysis.scalecheck`` (see cli.py). Rule catalogue
+and the conventions each rule encodes: rules_ast.py (source-level) and
+rules_jaxpr.py (traced schedule contract); suppression syntax in
+findings.py. Importing this package does NOT import jax — jaxpr rules load
+lazily only when selected.
+"""
+
+from repro.analysis.scalecheck.engine import RULES, rule_names, run
+from repro.analysis.scalecheck.findings import Finding, format_json, format_text
+
+__all__ = [
+    "RULES",
+    "rule_names",
+    "run",
+    "Finding",
+    "format_json",
+    "format_text",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.analysis.scalecheck`` entry point."""
+
+import sys
+
+from repro.analysis.scalecheck.cli import main
+
+sys.exit(main())

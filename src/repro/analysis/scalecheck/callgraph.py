@@ -1,0 +1,130 @@
+"""Lightweight static call graph over the checked file set.
+
+The tracer-hygiene rule needs "functions reachable from the jitted reduce
+path". This module builds a name-level over-approximation good enough for
+that job:
+
+  * every module-level function and every class method in the file set is a
+    node, indexed by bare name (methods deliberately collapse onto their
+    name: ``codec.decode(...)`` resolves to every ``decode`` method in the
+    package, because the receiver's type is unknown statically);
+  * an edge exists from function f to every function/method whose name f
+    calls — as a bare name, as ``module.name`` attribute call, or as a bare
+    method call ``obj.name(...)``;
+  * roots are (a) functions with a configured root name (the reduce entry
+    point) and (b) functions jitted at the definition site — decorated with
+    ``jax.jit`` / ``jax.pmap`` (directly or through ``functools.partial``).
+
+Over-approximation is the right failure mode here: reachability feeding a
+*lint* should err toward checking too much code, and the individual checks
+(see rules_ast.tracer-hygiene) are narrow enough that extra reachable
+functions do not produce noise. Nested functions are scanned as part of
+their enclosing function's body.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+from repro.analysis.scalecheck.engine import SourceFile
+
+__all__ = ["FunctionNode", "build_graph", "reachable_functions"]
+
+
+class FunctionNode:
+    """One function/method definition plus the names it calls."""
+
+    def __init__(self, name: str, src: SourceFile, node: ast.AST, is_root: bool):
+        self.name = name
+        self.src = src
+        self.node = node
+        self.is_root = is_root
+        self.calls: Set[str] = set()
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for a Name/Attribute chain, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """jax.jit / jax.pmap, bare or via functools.partial(jax.jit, ...)."""
+    target = dec
+    if isinstance(dec, ast.Call):
+        fn = _dotted(dec.func)
+        if fn in ("functools.partial", "partial") and dec.args:
+            target = dec.args[0]
+        else:
+            target = dec.func
+    return _dotted(target) in ("jax.jit", "jax.pmap", "jit", "pmap")
+
+
+class _CallCollector(ast.NodeVisitor):
+    """Collect the callable names referenced inside one function body."""
+
+    def __init__(self):
+        self.called: Set[str] = set()
+
+    def visit_Call(self, node: ast.Call):
+        if isinstance(node.func, ast.Name):
+            self.called.add(node.func.id)
+        elif isinstance(node.func, ast.Attribute):
+            # both 'module.fn' and bare method calls resolve by final name;
+            # the graph's name-level index makes these one lookup
+            self.called.add(node.func.attr)
+        # functions passed INTO jax.jit / vmap / tree.map etc. are callees too
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                self.called.add(arg.id)
+        self.generic_visit(node)
+
+
+def build_graph(
+    sources: Sequence[SourceFile], root_names: Iterable[str]
+) -> Dict[str, List[FunctionNode]]:
+    """Name -> definitions index with call edges and root marks."""
+    root_names = set(root_names)
+    index: Dict[str, List[FunctionNode]] = {}
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            is_root = node.name in root_names or any(
+                _is_jit_decorator(d) for d in node.decorator_list
+            )
+            fn = FunctionNode(node.name, src, node, is_root)
+            collector = _CallCollector()
+            for stmt in node.body:
+                collector.visit(stmt)
+            fn.calls = collector.called
+            index.setdefault(node.name, []).append(fn)
+    return index
+
+
+def reachable_functions(
+    sources: Sequence[SourceFile], root_names: Iterable[str]
+) -> List[Tuple[FunctionNode, bool]]:
+    """All function nodes with a flag: reachable from a root (incl. roots)."""
+    index = build_graph(sources, root_names)
+    worklist: List[FunctionNode] = [
+        fn for fns in index.values() for fn in fns if fn.is_root
+    ]
+    reached: Set[int] = {id(fn) for fn in worklist}
+    while worklist:
+        fn = worklist.pop()
+        for name in fn.calls:
+            for callee in index.get(name, ()):
+                if id(callee) not in reached:
+                    reached.add(id(callee))
+                    worklist.append(callee)
+    return [
+        (fn, id(fn) in reached) for fns in index.values() for fn in fns
+    ]

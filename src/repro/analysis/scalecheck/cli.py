@@ -1,0 +1,93 @@
+"""Command line front end: ``python -m repro.analysis.scalecheck``.
+
+    python -m repro.analysis.scalecheck                      # all rules, src/repro
+    python -m repro.analysis.scalecheck src/repro tests      # explicit paths
+    python -m repro.analysis.scalecheck --rules no-rw-surface,env-at-import
+    python -m repro.analysis.scalecheck --format json > report.json
+    python -m repro.analysis.scalecheck --list-rules
+
+Exit status: 0 when clean, 1 when any finding survives suppressions, 2 on
+usage errors (unknown rule, bad path). Findings print to stdout; the CI lint
+leg uploads the ``--format json`` report as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional, Sequence
+
+
+def _default_paths() -> List[str]:
+    """src/repro relative to the repo root this package is installed from."""
+    pkg = pathlib.Path(__file__).resolve().parents[2]  # .../src/repro
+    return [str(pkg)]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.scalecheck",
+        description="ScaleCom repo static invariant checker (AST + jaxpr).",
+    )
+    p.add_argument(
+        "paths",
+        nargs="*",
+        help="files or directories to scan (default: the repro package)",
+    )
+    p.add_argument(
+        "--rules",
+        default=None,
+        help="comma-separated rule names (default: all registered rules)",
+    )
+    p.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        dest="fmt",
+        help="output format (json is the CI artifact format)",
+    )
+    p.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the rule catalogue and exit",
+    )
+    return p
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    from repro.analysis.scalecheck import engine
+    from repro.analysis.scalecheck.findings import format_json, format_text
+
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        # load both engines so the catalogue is complete
+        from repro.analysis.scalecheck import rules_ast  # noqa: F401
+        from repro.analysis.scalecheck import rules_jaxpr  # noqa: F401
+
+        for rule in engine.RULES.values():
+            print(f"{rule.name:22s} [{rule.engine:5s}] {rule.help}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    paths = args.paths or _default_paths()
+
+    try:
+        findings = engine.run(paths, rules=rules)
+    except (ValueError, FileNotFoundError) as e:
+        print(f"scalecheck: error: {e}", file=sys.stderr)
+        return 2
+
+    selected = rules if rules is not None else list(engine.RULES)
+    if args.fmt == "json":
+        print(format_json(findings, rules=selected))
+    else:
+        print(format_text(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

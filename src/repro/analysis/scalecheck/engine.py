@@ -1,0 +1,177 @@
+"""scalecheck driver: source loading, the rule registry, and the run loop.
+
+Two engines share one Finding/rule surface:
+
+  * **AST rules** (``rules_ast``) parse every ``.py`` file under the given
+    paths with stdlib ``ast`` and check the repo's source-level conventions
+    (compat boundary, call-time env probing, the unified no-``rw_*`` backend
+    surface, tracer hygiene on the jitted reduce path, wire-byte coverage).
+    An AST rule sees the *whole* file set at once, so cross-module
+    consistency rules (payload-coverage) are ordinary rules, not special
+    cases.
+  * **jaxpr rules** (``rules_jaxpr``) trace ``scalecom_reduce`` under a
+    multi-bucket config and verify the bucketed scheduler's collective-issue
+    contract on the traced graph. They take no paths; their findings anchor
+    to virtual ``<jaxpr:...>`` locations.
+
+Per-line ``# scalecheck: ignore[rule]`` suppressions are honoured for AST
+findings (a trace-level finding has no meaningful source line to carry a
+waiver).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.scalecheck.findings import Finding, parse_suppressions
+
+__all__ = [
+    "SourceFile",
+    "Rule",
+    "RULES",
+    "register_rule",
+    "rule_names",
+    "load_sources",
+    "run",
+]
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed source file handed to every AST rule."""
+
+    path: pathlib.Path  # absolute
+    display: str  # repo-relative (or as-given) path used in findings
+    text: str
+    lines: List[str]
+    tree: ast.AST
+    suppressions: Dict[int, set]
+
+    def finding(self, rule: str, line: int, message: str) -> Finding:
+        return Finding(rule=rule, path=self.display, line=line, message=message)
+
+
+RuleFn = Callable[[Sequence[SourceFile]], List[Finding]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    engine: str  # "ast" | "jaxpr"
+    help: str
+    fn: RuleFn
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register_rule(name: str, engine: str, help: str):
+    """Decorator registering a rule under ``name`` (the CLI / suppression id)."""
+
+    def deco(fn: RuleFn) -> RuleFn:
+        if name in RULES:
+            raise ValueError(f"duplicate scalecheck rule {name!r}")
+        RULES[name] = Rule(name=name, engine=engine, help=help, fn=fn)
+        return fn
+
+    return deco
+
+
+def rule_names() -> Tuple[str, ...]:
+    return tuple(RULES)
+
+
+def _display(path: pathlib.Path, roots: Sequence[pathlib.Path]) -> str:
+    for root in roots:
+        try:
+            return str(path.relative_to(root.parent))
+        except ValueError:
+            continue
+    return str(path)
+
+
+def load_sources(paths: Sequence[str]) -> List[SourceFile]:
+    """Collect and parse every .py file under ``paths`` (files or dirs).
+
+    A file that fails to parse is itself a finding-worthy event, but the
+    engine has no rule context here, so it raises: a syntax error in checked
+    source should fail the run loudly, exactly like the compiler would.
+    """
+    roots = [pathlib.Path(p).resolve() for p in paths]
+    files: List[pathlib.Path] = []
+    for root in roots:
+        if root.is_dir():
+            files.extend(sorted(root.rglob("*.py")))
+        elif root.suffix == ".py":
+            files.append(root)
+        else:
+            raise FileNotFoundError(f"scalecheck path is not a .py file or dir: {root}")
+    out: List[SourceFile] = []
+    seen = set()
+    for f in files:
+        if f in seen:
+            continue
+        seen.add(f)
+        text = f.read_text()
+        lines = text.splitlines()
+        out.append(
+            SourceFile(
+                path=f,
+                display=_display(f, roots),
+                text=text,
+                lines=lines,
+                tree=ast.parse(text, filename=str(f)),
+                suppressions=parse_suppressions(lines),
+            )
+        )
+    return out
+
+
+def run(
+    paths: Sequence[str],
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Run the selected rules (default: all registered) over ``paths``.
+
+    Returns the surviving findings after per-line suppressions. Importing the
+    rule modules here (not at module import) keeps the registry population
+    explicit and avoids a jax import unless a jaxpr rule is actually run.
+    """
+    from repro.analysis.scalecheck import rules_ast  # noqa: F401  (registers)
+
+    selected = list(rules) if rules else None
+    # jaxpr rules import jax; load them only when needed — i.e. when running
+    # everything, or when a selected name is not an already-registered AST
+    # rule (it is either a jaxpr rule or a genuine unknown to be diagnosed).
+    if selected is None or any(
+        r not in RULES or RULES[r].engine == "jaxpr" for r in selected
+    ):
+        from repro.analysis.scalecheck import rules_jaxpr  # noqa: F401
+    if selected is None:
+        selected = list(RULES)
+    unknown = [r for r in selected if r not in RULES]
+    if unknown:
+        raise ValueError(
+            f"unknown scalecheck rule(s) {unknown}; known: {sorted(RULES)}"
+        )
+
+    ast_rules = [RULES[r] for r in selected if RULES[r].engine == "ast"]
+    jaxpr_rules = [RULES[r] for r in selected if RULES[r].engine == "jaxpr"]
+
+    findings: List[Finding] = []
+    if ast_rules:
+        sources = load_sources(paths)
+        by_display = {s.display: s for s in sources}
+        for rule in ast_rules:
+            raw = rule.fn(sources)
+            for f in raw:
+                src = by_display.get(f.path)
+                if src is not None and f.rule in src.suppressions.get(f.line, ()):
+                    continue
+                findings.append(f)
+    for rule in jaxpr_rules:
+        findings.extend(rule.fn(()))
+    return findings

@@ -1,0 +1,96 @@
+"""Finding records, per-line suppressions, and output formatting.
+
+A finding is one violated invariant at one location. Suppressions are
+per-line comments in the checked source:
+
+    something_flagged()  # scalecheck: ignore[rule-name]
+    other_flagged()      # scalecheck: ignore[rule-a, rule-b]
+
+The rule list in brackets is mandatory: a bare ``# scalecheck: ignore``
+would silence every current and future rule on the line, which is exactly
+the kind of blanket waiver a static invariant checker exists to prevent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Sequence, Set
+
+__all__ = [
+    "Finding",
+    "parse_suppressions",
+    "apply_suppressions",
+    "format_text",
+    "format_json",
+]
+
+_SUPPRESS_RE = re.compile(r"#\s*scalecheck:\s*ignore\[([A-Za-z0-9_\-, ]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one location.
+
+    path: file the finding anchors to (repo-relative where possible), or a
+          virtual location like ``<jaxpr:flat>`` for trace-level findings.
+    line: 1-based line number; 0 for whole-file / trace-level findings.
+    """
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def key(self):
+        return (self.path, self.line, self.rule, self.message)
+
+
+def parse_suppressions(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """Map 1-based line number -> set of rule names suppressed on that line."""
+    out: Dict[int, Set[str]] = {}
+    for ln, line in enumerate(lines, 1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[ln] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def apply_suppressions(
+    findings: Sequence[Finding], suppressions: Dict[int, Set[str]]
+) -> List[Finding]:
+    return [
+        f
+        for f in findings
+        if f.rule not in suppressions.get(f.line, ())
+    ]
+
+
+def format_text(findings: Sequence[Finding]) -> str:
+    if not findings:
+        return "scalecheck: clean (0 findings)"
+    lines = [
+        f"{f.path}:{f.line}: [{f.rule}] {f.message}"
+        for f in sorted(findings, key=Finding.key)
+    ]
+    lines.append(f"scalecheck: {len(findings)} finding(s)")
+    return "\n".join(lines)
+
+
+def format_json(findings: Sequence[Finding], *, rules: Sequence[str]) -> str:
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return json.dumps(
+        {
+            "rules_run": list(rules),
+            "count": len(findings),
+            "counts_by_rule": dict(sorted(counts.items())),
+            "findings": [
+                dataclasses.asdict(f) for f in sorted(findings, key=Finding.key)
+            ],
+        },
+        indent=1,
+        sort_keys=False,
+    )

@@ -63,6 +63,8 @@ from typing import Callable, Dict, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.compat import jax_compat
+
 Array = jnp.ndarray
 
 __all__ = [
@@ -158,12 +160,14 @@ def available_backends() -> Tuple[str, ...]:
 
 
 def pallas_available() -> bool:
-    """Call-time probe: does this jax ship the pallas package?"""
-    try:
-        from jax.experimental import pallas  # noqa: F401
-    except Exception:
-        return False
-    return True
+    """Call-time probe: does this jax ship the pallas package?
+
+    Delegates to the compat layer (repro.compat.jax_compat), the one module
+    allowed to touch ``jax.experimental`` — scalecheck's compat-boundary
+    rule enforces that split. Re-exported here because the backend registry
+    is the probe's consumer (and tests monkeypatch it at this name).
+    """
+    return jax_compat.pallas_available()
 
 
 def resolve_backend(

@@ -50,6 +50,7 @@ __all__ = [
     "tree_map_with_path",
     "axis_size",
     "psum_scatter",
+    "pallas_available",
     "has_optimization_barrier",
     "optimization_barrier",
     "has_float8",
@@ -186,6 +187,20 @@ def psum_scatter(x, axis_name: str, *, scatter_dimension: int = 0, tiled: bool =
 # ---------------------------------------------------------------------------
 # scheduling barriers
 # ---------------------------------------------------------------------------
+
+
+def pallas_available() -> bool:
+    """Call-time probe: does this jax ship the pallas package?
+
+    ``jax.experimental.pallas`` moved/changed across the supported span, so
+    the import probe lives here behind the compat boundary; the kernel
+    registry (repro.backends.base) consumes the verdict, never the import.
+    """
+    try:
+        from jax.experimental import pallas  # noqa: F401
+    except Exception:
+        return False
+    return True
 
 
 def has_optimization_barrier() -> bool:

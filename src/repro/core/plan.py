@@ -102,16 +102,28 @@ class TensorPlan:
         return self.comp is None
 
 
+# Per-worker INDEX bytes for k kept values, by compressor. Value bytes are
+# always 4k (fp32 on the wire); index cost is what distinguishes the schemes:
+#   clt_k / true_topk  one index set chosen by the leader, broadcast once and
+#                      amortized over the G workers sharing it -> 4k/G
+#   local_topk         every worker ships its own index set -> 4k
+#   random_k           indices are derived from the shared PRNG key -> 0
+# This dict IS the wire-format registry: scalecheck's payload-coverage rule
+# statically cross-checks its keys against core.compressors.COMPRESSORS
+# ("none" excluded — dense tensors never enter payload_bytes).
+_INDEX_BYTES = {
+    "clt_k": lambda k, G: 4.0 * k / G,
+    "true_topk": lambda k, G: 4.0 * k / G,
+    "local_topk": lambda k, G: 4.0 * k,
+    "random_k": lambda k, G: 0.0,
+}
+
+
 def payload_bytes(comp: Optional[CompressorConfig], k: int, groups: int) -> float:
     """Per-worker wire bytes for k kept values (see module docstring)."""
-    values = 4.0 * k
     if comp is None or comp.name == "none":
         raise ValueError("payload_bytes is for compressed tensors; dense is 4*size")
-    if comp.name == "local_topk":
-        return values + 4.0 * k
-    if comp.name == "random_k":
-        return values
-    return values + 4.0 * k / groups  # clt_k / true_topk leader broadcast
+    return 4.0 * k + _INDEX_BYTES[comp.name](k, groups)
 
 
 def _plan_one(

@@ -1,0 +1,9 @@
+"""Seeded violation for the ``compat-boundary`` rule (never imported)."""
+
+import jax
+from jax.experimental import pallas  # outside compat/ and kernels/
+
+
+def bad_mesh():
+    mesh = jax.make_mesh((8,), ("data",))  # version-gated symbol
+    return mesh, pallas

@@ -1,0 +1,13 @@
+"""Seeded violation for the ``env-at-import`` rule (never imported)."""
+
+import os
+
+LAYOUT = os.environ.get("SCALECOM_LAYOUT", "flat")  # read at import time
+
+if "SCALECOM_BACKEND" in os.environ:  # membership read at import time
+    BACKEND = os.environ["SCALECOM_BACKEND"]
+
+
+def fine():
+    # call-time probes are the sanctioned pattern
+    return os.environ.get("SCALECOM_BUCKET_MB", "")

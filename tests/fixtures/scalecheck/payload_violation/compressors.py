@@ -1,0 +1,3 @@
+"""Seeded payload-coverage fixture: registry half (never imported)."""
+
+COMPRESSORS = ("clt_k", "local_topk", "glt_k", "none")

@@ -1,0 +1,11 @@
+"""Seeded payload-coverage fixture: wire-byte half (never imported).
+
+Drift both ways: ``glt_k`` is registered with no index-byte case, and
+``random_k`` has an index-byte case but no registered compressor.
+"""
+
+_INDEX_BYTES = {
+    "clt_k": lambda k, G: 4.0 * k / G,
+    "local_topk": lambda k, G: 4.0 * k,
+    "random_k": lambda k, G: 0.0,
+}

@@ -1,0 +1,10 @@
+"""Seeded violation for the ``no-rw-surface`` rule (never imported)."""
+
+
+def rw_gather(x, idx):  # a per-layout op variant sneaking back in
+    return x[idx]
+
+
+class Backend:
+    def select(self, x):
+        return rw_gather(x, 0)

@@ -1,0 +1,23 @@
+"""Seeded violation for the ``tracer-hygiene`` rule (never imported)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def reduce_step(g):
+    norm = float(jnp.linalg.norm(g))  # concretizes a tracer under jit
+    if jnp.max(g) > 0:  # Python control flow on a traced value
+        g = g / norm
+    return np.asarray(g)  # host coercion on the jitted path
+
+
+def helper(g):
+    # reachable from the jitted root through the call below
+    return bool(jnp.any(g))
+
+
+@jax.jit
+def outer(g):
+    return helper(g)

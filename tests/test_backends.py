@@ -378,23 +378,19 @@ def test_pallas_backend_bypasses_jnp_chunked_ops(monkeypatch, layout):
 
 
 def test_no_rw_symbols_survive():
-    """Grep-clean (compat-layer style): the dual flat/rowwise op surface is
-    gone for good — no ``rw_*`` symbol anywhere in the package. A reappearing
-    rw_ helper means a feature is about to land twice (once per layout), the
-    exact trap the unified trailing-axis pipeline removed."""
+    """The dual flat/rowwise op surface is gone for good — no ``rw_*`` symbol
+    anywhere in the package. A reappearing rw_ helper means a feature is about
+    to land twice (once per layout), the exact trap the unified trailing-axis
+    pipeline removed. One implementation of the invariant: the scalecheck
+    ``no-rw-surface`` rule (this wrapper keeps the tripwire in tier-1)."""
     import pathlib
-    import re
 
     import repro
+    from repro.analysis import scalecheck
 
     root = pathlib.Path(repro.__file__).parent
-    offenders = [
-        f"{path.relative_to(root)}:{ln}: {line.strip()}"
-        for path in sorted(root.rglob("*.py"))
-        for ln, line in enumerate(path.read_text().splitlines(), 1)
-        if re.search(r"\brw_\w+", line)
-    ]
-    assert not offenders, "rw_* symbols resurfaced:\n" + "\n".join(offenders)
+    findings = scalecheck.run([str(root)], rules=["no-rw-surface"])
+    assert not findings, scalecheck.format_text(findings)
 
 
 def test_backend_surface_has_no_rw_methods():

@@ -191,26 +191,17 @@ def test_float8_probe_and_emulated_grid(monkeypatch):
 def test_no_version_gated_jax_symbols_outside_compat():
     """Only repro.compat may touch version-gated JAX symbols directly; every
     other call site must go through the compat layer (the portability
-    contract this PR establishes)."""
+    contract this PR establishes). One implementation of the invariant: the
+    scalecheck ``compat-boundary`` rule (AST-level, so string literals naming
+    the symbols — e.g. the rule's own gated list — are not false positives the
+    way the historical grep had)."""
     import pathlib
-    import re
 
-    gated = re.compile(
-        r"jax\.sharding\.AxisType|jax\.set_mesh|jax\.shard_map\b"
-        r"|jax\.make_mesh|jax\.sharding\.use_mesh|jax\.lax\.axis_size"
-        r"|jnp\.float8_e4m3fn|jax\.numpy\.float8_e4m3fn"
-    )
+    from repro.analysis import scalecheck
+
     src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
-    offenders = []
-    for py in src.rglob("*.py"):
-        if "compat" in py.parts:
-            continue
-        for ln, line in enumerate(py.read_text().splitlines(), 1):
-            if gated.search(line):
-                offenders.append(f"{py.relative_to(src.parent)}:{ln}: {line.strip()}")
-    assert not offenders, "version-gated jax symbols outside repro.compat:\n" + "\n".join(
-        offenders
-    )
+    findings = scalecheck.run([str(src)], rules=["compat-boundary"])
+    assert not findings, scalecheck.format_text(findings)
 
 
 # ---------------------------------------------------------------------------

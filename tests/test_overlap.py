@@ -79,6 +79,69 @@ def test_plan_buckets_includes_dense_fallback_tensors():
     assert buckets[0].bytes_payload == plans[0].bytes_payload + plans[1].bytes_payload
 
 
+def test_plan_buckets_empty_tree():
+    """An empty param tree plans to an empty schedule — and the bucketed
+    reduce over it is a no-op, not a crash."""
+    cfg = _cfg(min_size=1)
+    assert plan_buckets((), 1024) == ()
+    state = init_state({}, 4, min_size=1)
+    ghat, new_state, stats = scalecom_reduce({}, state, cfg, buckets=1024)
+    assert ghat == {}
+    assert int(new_state.t) == int(state.t) + 1
+    assert float(stats["comm_bytes_per_worker"]) == 0.0
+
+
+def test_plan_buckets_all_oversize_one_bucket_each():
+    """A tree of ONLY oversize tensors degenerates to one bucket per tensor,
+    in reverse grad-ready order."""
+    cfg = _cfg(min_size=1)
+    leaves = tuple((f"['w{i}']", (2048,), 4) for i in range(3))  # 8 KB each
+    buckets = plan_buckets(_plans(cfg, leaves), 1024)
+    assert [b.leaf_ids for b in buckets] == [(2,), (1,), (0,)]
+    assert all(b.bytes_dense == 4.0 * 2048 for b in buckets)
+
+
+def test_plan_buckets_exact_boundary_stays_in_bucket():
+    """A tensor landing EXACTLY on bucket_bytes does not open a new bucket:
+    the close condition is strictly greater-than (DDP bucket_cap semantics)."""
+    cfg = _cfg(min_size=1)
+    leaves = tuple((f"['w{i}']", (256,), 4) for i in range(3))  # 1 KB each
+    buckets = plan_buckets(_plans(cfg, leaves), 2048)
+    assert [b.leaf_ids for b in buckets] == [(2, 1), (0,)]
+    assert buckets[0].bytes_dense == 2048.0  # filled to the boundary exactly
+
+
+@pytest.mark.parametrize("layout", ["flat", "rowwise"])
+def test_edge_trees_bitwise_identical(layout):
+    """The bitwise bucketed≡unbucketed contract holds on the edge geometries
+    too: only-oversize tensors and an exact-boundary pack."""
+    n = 4
+    for sizes, bucket_bytes in (
+        ({"a": (2048,), "b": (2048,)}, 1024),  # every tensor oversize
+        ({"a": (256,), "b": (256,)}, 2048),  # sum lands exactly on the target
+    ):
+        cfg = _cfg(layout=layout, min_size=1)
+        params = {k: jnp.zeros(s) for k, s in sizes.items()}
+        g = {
+            k: jax.random.normal(jax.random.PRNGKey(i), (n,) + s)
+            for i, (k, s) in enumerate(sizes.items())
+        }
+        outs = []
+        for buckets in (False, bucket_bytes):
+            state = init_state(params, n, min_size=1, layout=layout)
+            ghat, new_state, _ = scalecom_reduce(g, state, cfg, buckets=buckets)
+            outs.append((ghat, new_state))
+        for k in sizes:
+            np.testing.assert_array_equal(
+                np.asarray(outs[0][0][k]), np.asarray(outs[1][0][k])
+            )
+        for path in outs[0][1].residues:
+            np.testing.assert_array_equal(
+                np.asarray(outs[0][1].residues[path]["q"]),
+                np.asarray(outs[1][1].residues[path]["q"]),
+            )
+
+
 def test_plan_buckets_cached_and_rejects_nonpositive():
     cfg = _cfg(min_size=1)
     plans = _plans(cfg, (("['w']", (256,), 4),))
