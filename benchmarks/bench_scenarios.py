@@ -1,0 +1,74 @@
+"""Scale & failure scenario sweep through the harness: fault-recovery
+distance and measured gradient build-up per scenario, via the same runner as
+``python -m repro.harness`` (``src/repro/harness``). Results land in
+``BENCH_scenarios.json``.
+
+Rows report wall time per scenario run and the headline derived quantities:
+the relative effective-trajectory distance of the faulted run vs its
+fault-free twin (against the codec tolerance), and the measured build-up
+ratio nnz(ĝ)/k (against the union-average model for local_topk). A CPU
+container runs the fleet as worker-stacked arrays; the numbers are
+algorithmic, not timing claims.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import Row
+
+JSON_PATH = os.environ.get("SCALECOM_BENCH_SCENARIOS_JSON", "BENCH_scenarios.json")
+
+WORKERS = (8, 16)
+SCENARIOS = ("straggler", "drop", "stale", "corrupt")
+STEPS = 10
+
+
+def run() -> list[Row]:
+    from repro.analysis.perfmodel import buildup_ratio_model
+    from repro.harness.scenarios import DEFAULT_CHUNK, run_buildup_sweep, run_scenario
+
+    rows: list[Row] = []
+    results = []
+    for workers in WORKERS:
+        for name in SCENARIOS:
+            t0 = time.time()
+            res = run_scenario(name, workers, steps=STEPS)
+            dt_us = (time.time() - t0) * 1e6
+            results.append(res.to_json())
+            rows.append(
+                (
+                    f"scenarios/{name}/n{workers}",
+                    dt_us,
+                    f"dist={res.final_distance:.4f} tol={res.tolerance:.4f} "
+                    f"replans={len(res.replans)} "
+                    f"{'ok' if res.passed else 'VIOLATION'}",
+                )
+            )
+
+    sweep = run_buildup_sweep(WORKERS, steps=4)
+    for row in sweep["rows"]:
+        n = int(row["workers"])
+        rows.append(
+            (
+                f"scenarios/buildup/n{n}",
+                0.0,
+                f"clt_k={row['clt_k']:.3f} local_topk={row['local_topk']:.3f} "
+                f"model={buildup_ratio_model(n, DEFAULT_CHUNK):.3f}",
+            )
+        )
+
+    violations = [v for r in results for v in r["violations"]]
+    violations += sweep["violations"]
+    with open(JSON_PATH, "w") as f:
+        json.dump(
+            {"results": results, "buildup": sweep, "violations": violations},
+            f,
+            indent=1,
+        )
+    rows.append(("scenarios/bench_json", 0.0, f"path={JSON_PATH}"))
+    if violations:
+        raise RuntimeError(f"scenario invariant violations: {violations}")
+    return rows

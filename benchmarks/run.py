@@ -24,6 +24,7 @@ BENCHES = [
     ("rate_sweep", "benchmarks.bench_rate_sweep"),
     ("kernels", "benchmarks.bench_kernels"),
     ("overlap", "benchmarks.bench_overlap"),
+    ("scenarios", "benchmarks.bench_scenarios"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -7,7 +7,10 @@ compare against the uncompressed baseline — the paper's Table-2 experiment in
 Hacking on the repo? The static invariant checker (compat boundary, tracer
 hygiene, wire-byte coverage, collective schedule) is
 ``PYTHONPATH=src python -m repro.analysis.scalecheck`` — see ROADMAP.md
-"Static checks".
+"Static checks". The scale & failure scenario harness (worker sweeps with
+straggler/drop/stale-residue faults and per-step invariants) is
+``PYTHONPATH=src python -m repro.harness --scenarios all --workers 8`` —
+see ROADMAP.md "Scenario harness".
 """
 
 import sys

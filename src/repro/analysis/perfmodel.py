@@ -42,6 +42,8 @@ __all__ = [
     "PerfConfig",
     "step_time",
     "fig6_sweep",
+    "buildup_ratio_model",
+    "buildup_curve",
     "overlap_timeline",
     "overlap_report",
     "reference_transformer_perf",
@@ -125,6 +127,57 @@ def step_time(cfg: PerfConfig, scheme: str) -> Dict[str, float]:
         "t_total": total,
         "comm_fraction": t_comm / total,
     }
+
+
+# ---------------------------------------------------------------------------
+# gradient build-up (local_topk's O(n) growth vs ScaleCom's flat curve)
+# ---------------------------------------------------------------------------
+
+
+def buildup_ratio_model(workers: int, chunk: int, topm: int = 1) -> float:
+    """Modeled gradient build-up of local_topk's union-average, as a ratio.
+
+    Each of ``workers`` workers keeps its own top-m per chunk of C elements,
+    and the "reduced" gradient is the union of all selections (Fig. 1a) —
+    so the dense result carries E[distinct offsets] entries per chunk rather
+    than m. Under the independent-uniform selection approximation (exact for
+    noise-dominated gradients, an upper bound when worker gradients
+    correlate and selections overlap):
+
+        E[distinct] = C * (1 - (1 - m/C)^n)
+
+    and the ratio vs the per-worker payload k = n_chunks * m is
+
+        buildup(n) = C * (1 - (1 - m/C)^n) / m
+
+    which grows ~linearly in n while n*m << C and saturates at C/m — the
+    O(n) communication growth of Table 1's local top-k row. Shared-index
+    compressors (clt_k / true_topk / random_k) hold this ratio at exactly 1
+    for every n: one index set, k entries, flat in n. The scenario harness
+    (repro.harness) measures the real curve and checks it against this model.
+    """
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    p = topm / chunk
+    return chunk * (1.0 - (1.0 - p) ** workers) / topm
+
+
+def buildup_curve(
+    workers_list=(8, 16, 32, 64), chunk: int = 64, topm: int = 1
+) -> List[Dict[str, float]]:
+    """Build-up ratio vs worker count: local_topk's growth, clt_k's flat 1.
+
+    One row per worker count — the model the harness's measured sweep is
+    compared against (and the shape of paper Fig. 6b's divergence).
+    """
+    return [
+        {
+            "workers": float(n),
+            "local_topk": buildup_ratio_model(n, chunk, topm),
+            "clt_k": 1.0,
+        }
+        for n in workers_list
+    ]
 
 
 # ---------------------------------------------------------------------------

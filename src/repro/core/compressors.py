@@ -168,15 +168,43 @@ def _select_random(ef: Array, t: Array, cfg: CompressorConfig, backend) -> Array
     (*lead, n_chunks_per_row) trailing-axis draw of the same total chunk
     count are bitwise identical after reshape — flat ≡ rowwise holds for
     random_k exactly like for the data-dependent selectors.
+
+    Tail chunks: when the trailing axis is not a chunk multiple, the last
+    chunk only covers ``size mod chunk`` real elements. A raw draw over
+    [0, chunk) can point past the end — the gather then reads the zero
+    padding and the scatter's write is sliced away, so the entry is silently
+    dropped from ĝ while ``plan.bytes_payload`` still bills a real value.
+    Draws are therefore confined to the tail's real width (the magnitude
+    selectors get this for free: zero padding never wins an arg-max against
+    real data). Both guards are no-ops when the axis is a chunk multiple, so
+    the flat ≡ rowwise bitwise property is untouched.
     """
     del backend
     key = jax.random.fold_in(jax.random.PRNGKey(0x5CA1EC0), t)
     lead = ef.shape[1:-1]  # per-tensor dims between the worker axis and chunks
-    n_ch = -(-ef.shape[-1] // cfg.chunk)
+    size = ef.shape[-1]
+    n_ch = -(-size // cfg.chunk)
+    tail = size - (n_ch - 1) * cfg.chunk  # real width of the last chunk
     if cfg.topm == 1:
-        return jax.random.randint(key, lead + (n_ch,), 0, cfg.chunk, dtype=jnp.int32)
+        idx = jax.random.randint(
+            key, lead + (n_ch,), 0, cfg.chunk, dtype=jnp.int32
+        )
+        if tail < cfg.chunk:
+            width = jnp.where(
+                jnp.arange(n_ch) == n_ch - 1, tail, cfg.chunk
+            ).astype(jnp.int32)
+            idx = jnp.minimum(idx, width - 1)
+        return idx
     # sample without replacement per chunk via random values + top_k
     r = jax.random.uniform(key, lead + (n_ch, cfg.chunk))
+    if tail < cfg.chunk:
+        # rank past-the-end tail lanes below every real lane (uniform draws
+        # are >= 0) so top_k only reaches them once the tail's real lanes are
+        # exhausted — the same semantics as magnitude selection over padding
+        valid = (jnp.arange(n_ch)[:, None] < n_ch - 1) | (
+            jnp.arange(cfg.chunk)[None, :] < tail
+        )
+        r = jnp.where(valid, r, -1.0)
     _, idx = jax.lax.top_k(r, cfg.topm)
     return idx.astype(jnp.int32)
 

@@ -56,7 +56,7 @@ import numpy as np
 from repro.core.chunked import num_chunks
 from repro.core.compressors import CompressorConfig, exact_k
 from repro.core.rates import resolve_compressor
-from repro.core.state import resolve_layout, storage_shape
+from repro.core.state import CODECS, codec_signature, resolve_layout, storage_shape
 
 Shape = Tuple[int, ...]
 
@@ -126,6 +126,65 @@ def payload_bytes(comp: Optional[CompressorConfig], k: int, groups: int) -> floa
     return 4.0 * k + _INDEX_BYTES[comp.name](k, groups)
 
 
+def _raise_state_drift(
+    path: str,
+    shape: Shape,
+    G: int,
+    layout: str,
+    residue_dtype: str,
+    actual: Tuple,
+    expected: Tuple,
+) -> None:
+    """Diagnose an init_state/ScaleComConfig drift and raise a named error.
+
+    The execute stage would otherwise hit this as a cryptic reshape/broadcast
+    failure deep inside ``_execute``; here we know which tensor, which layout
+    each side resolved, and (by re-deriving candidate signatures) WHAT
+    drifted: the chunk layout, the residue codec, or the worker count.
+    """
+    other = "rowwise" if layout == "flat" else "flat"
+    causes = []
+    if actual == codec_signature(residue_dtype, G, storage_shape(shape, other)):
+        causes.append(
+            f"the residue was initialized under layout={other!r} but this "
+            f"reduce resolved layout={layout!r} (e.g. $SCALECOM_LAYOUT "
+            f"changed between init_state and scalecom_reduce)"
+        )
+    # worker-axis drift: every codec stores (n, *storage) in its "q" leaf
+    actual_by_name = dict((name, sh) for name, sh, _ in actual)
+    q_shape = actual_by_name.get("q")
+    if q_shape and q_shape[0] != G and actual == codec_signature(
+        residue_dtype, q_shape[0], storage_shape(shape, layout)
+    ):
+        causes.append(
+            f"the residue carries {q_shape[0]} worker rows but this reduce "
+            f"folds to G={G} workers — membership or `groups` changed; "
+            f"core.state.remap_state(state, {q_shape[0]}, {G}) migrates the "
+            f"EF mass to the new worker count"
+        )
+    for name in CODECS:
+        if name != residue_dtype and actual == codec_signature(
+            name, G, storage_shape(shape, layout)
+        ):
+            causes.append(
+                f"the residue was encoded by the {name!r} codec but "
+                f"ScaleComConfig.residue_dtype={residue_dtype!r}"
+            )
+    detail = "; ".join(causes) if causes else (
+        f"expected {expected}, found {actual}"
+    )
+    raise ValueError(
+        f"ScaleCom state drift on tensor {path!r}: the stored residue "
+        f"encoding does not match what this reduce's plan (layout={layout!r}, "
+        f"residue_dtype={residue_dtype!r}, G={G}) will decode — {detail}. "
+        f"Remediation: re-init the state (core.state.init_state) with the "
+        f"current config, or pin the layout explicitly "
+        f"(ScaleComConfig(layout=...) / init_state(layout=...)) so both "
+        f"sides resolve identically; on membership change use "
+        f"core.state.remap_state."
+    )
+
+
 def _plan_one(
     path: str,
     shape: Shape,
@@ -136,8 +195,21 @@ def _plan_one(
     min_size: int,
     groups: Optional[int],
     has_residue: bool,
+    residue_dtype: str = "fp32",
+    enc_sig: Optional[Tuple] = None,
 ) -> TensorPlan:
     size = int(np.prod(shape)) if len(shape) else 1
+    if groups is not None and (groups < 1 or n_stack % groups != 0):
+        # plan-time guard for the execute stage's _group_fold reshape: a bare
+        # assert there disappears under `python -O`, and membership changes
+        # (e.g. a 64 -> 63 dropped-worker transition) hit this first
+        raise ValueError(
+            f"n={n_stack} workers are not divisible into groups={groups} "
+            f"(tensor {path!r}): hierarchical grouping needs n % groups == 0 "
+            f"with groups >= 1. After a membership change, re-plan groups to "
+            f"a divisor of {n_stack} and remap the residues "
+            f"(core.state.remap_state; see repro.harness elastic re-plan)."
+        )
     G = groups if groups is not None else n_stack
     comp: Optional[CompressorConfig] = base
     if rate_rules:
@@ -146,6 +218,12 @@ def _plan_one(
         comp = None
 
     storage = storage_shape(shape, layout)
+    if comp is not None and enc_sig is not None:
+        expected = codec_signature(residue_dtype, G, storage)
+        if enc_sig != expected:
+            _raise_state_drift(
+                path, shape, G, layout, residue_dtype, enc_sig, expected
+            )
     if comp is None:
         return TensorPlan(
             path=path, shape=shape, size=size, groups=G, layout=layout,
@@ -175,11 +253,18 @@ def _plan_cached(
     rate_rules: Tuple,
     min_size: int,
     groups: Optional[int],
+    residue_dtype: str,
 ) -> Tuple[TensorPlan, ...]:
+    # residue_paths elements are either bare paths (no drift validation) or
+    # (path, enc_signature) pairs from core.state.residue_signature — the
+    # signature both keys the cache (a remapped state re-plans) and is
+    # validated against what this plan will decode.
+    sigs = {e[0]: e[1] for e in residue_paths if isinstance(e, tuple)}
+    paths = {e if isinstance(e, str) else e[0] for e in residue_paths}
     return tuple(
         _plan_one(
             path, shape, n_stack, layout, base, rate_rules, min_size, groups,
-            path in residue_paths,
+            path in paths, residue_dtype, sigs.get(path),
         )
         for path, shape, n_stack in leaves
     )
@@ -266,7 +351,19 @@ def plan_tensors(
     cfg:           ScaleComConfig (only the plan-relevant fields key the
                    cache, so backend instances etc. don't defeat it).
     residue_paths: paths that carry EF state (init_state's min_size cut);
-                   tensors without a residue are reduced densely.
+                   tensors without a residue are reduced densely. Either bare
+                   path strings, or the (path, encoding-signature) pairs of
+                   ``core.state.residue_signature`` — with signatures, the
+                   plan validates that the stored residues match what the
+                   execute stage will decode (layout / codec / worker-count
+                   drift raises a named ValueError here instead of a cryptic
+                   reshape deep in ``_execute``), and a membership remap
+                   (``remap_state``) automatically invalidates stale cached
+                   plans because the signature is part of the cache key.
+
+    Also validated here, per tensor: hierarchical divisibility
+    (worker_axis_size % cfg.groups == 0) — plan-time, so it survives
+    ``python -O`` and names the offending tensor.
     """
     return _plan_cached(
         tuple(leaves),
@@ -276,4 +373,5 @@ def plan_tensors(
         tuple(cfg.rate_rules),
         cfg.min_size,
         cfg.groups,
+        cfg.residue_dtype,
     )

@@ -93,7 +93,7 @@ from repro.core.compressors import (
 from repro.core import overlap
 from repro.core.filter import lowpass_update
 from repro.core.plan import TensorPlan, plan_tensors
-from repro.core.state import CODECS, ScaleComState, codec_key
+from repro.core.state import CODECS, ScaleComState, codec_key, residue_signature
 
 Array = jnp.ndarray
 Pytree = Any
@@ -157,6 +157,12 @@ class ScaleComConfig:
                 "(bucketing is toggled by scalecom_reduce(buckets=...) / "
                 "$SCALECOM_BUCKET_MB, not by zeroing the size)"
             )
+        if self.groups is not None and self.groups < 1:
+            raise ValueError(
+                f"groups must be a positive worker-group count or None, got "
+                f"{self.groups} (divisibility against the actual worker count "
+                f"is checked per tensor at plan time)"
+            )
 
     def n_workers(self, data_ranks: int) -> int:
         return self.groups if self.groups is not None else data_ranks
@@ -168,11 +174,18 @@ def _resolve_cfg_backend(cfg: ScaleComConfig):
 
 
 def _group_fold(g: Array, groups: int) -> Array:
-    """(n, ...) -> (G, ...): dense mean inside each group of n/G workers."""
+    """(n, ...) -> (G, ...): dense mean inside each group of n/G workers.
+
+    Divisibility is validated at plan time (core.plan.plan_tensors raises a
+    ValueError naming n, groups and the tensor path — a bare ``assert`` here
+    would disappear under ``python -O``); the raise below is defense in depth
+    for callers that bypass the plan stage.
+    """
     n = g.shape[0]
     if groups == n:
         return g
-    assert n % groups == 0, f"{n} workers not divisible into {groups} groups"
+    if n % groups != 0:
+        raise ValueError(f"{n} workers not divisible into {groups} groups")
     return jnp.mean(g.reshape((groups, n // groups) + g.shape[1:]), axis=1)
 
 
@@ -297,7 +310,11 @@ def scalecom_reduce(
             for p, g in flat
         ),
         cfg,
-        frozenset(state.residues),
+        # encoding signatures, not just paths: the plan validates the stored
+        # residues against what _execute will decode (layout/codec/membership
+        # drift raises a named error at plan time), and a remapped state
+        # re-keys the plan cache
+        residue_signature(state.residues),
     )
     t = state.t
 

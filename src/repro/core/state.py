@@ -36,6 +36,7 @@ Residue storage layout follows ScaleComConfig.layout:
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import zlib
 from typing import Any, Dict, Tuple, Union
@@ -56,8 +57,11 @@ __all__ = [
     "ScaleComState",
     "codec_key",
     "codec_roundtrip_error",
+    "codec_signature",
     "init_state",
+    "remap_state",
     "residue_bytes",
+    "residue_signature",
     "resolve_layout",
     "storage_shape",
     "stochastic_round",
@@ -346,6 +350,104 @@ def init_state(
             continue
         residues[path] = codec.init(n_workers, storage_shape(leaf.shape, layout))
     return ScaleComState(residues=residues, t=jnp.zeros((), jnp.int32))
+
+
+def _enc_signature(enc: Pytree) -> Tuple:
+    """Hashable (leaf-name, shape, dtype) signature of one encoded residue."""
+    return tuple(
+        sorted((k, tuple(v.shape), str(v.dtype)) for k, v in enc.items())
+    )
+
+
+def codec_signature(residue_dtype: str, n: int, storage: Shape) -> Tuple:
+    """The encoding signature ``CODECS[residue_dtype].init(n, storage)`` would
+    produce, computed shape-only (``jax.eval_shape`` — no allocation).
+
+    This is the expected side of the plan-time state-drift check
+    (core.plan.plan_tensors): comparing it against ``residue_signature`` of
+    the live state catches layout drift (flat vs rowwise storage), codec
+    drift, and worker-count drift *before* the execute stage turns them into
+    a cryptic reshape error.
+    """
+    codec = CODECS[residue_dtype]
+    return _enc_signature(jax.eval_shape(lambda: codec.init(n, storage)))
+
+
+def residue_signature(residues: Dict[str, Pytree]) -> frozenset:
+    """Hashable per-tensor encoding signatures of a residue dict.
+
+    Frozenset of (path, enc_signature) pairs — the form ``scalecom_reduce``
+    hands to ``plan_tensors`` so the plan cache is keyed by (and validates
+    against) the state that will actually be decoded, not just the residue
+    path set. Membership changes (``remap_state``) alter the worker axis and
+    therefore the signature, which is what invalidates stale cached plans.
+    """
+    return frozenset(
+        (path, _enc_signature(enc)) for path, enc in residues.items()
+    )
+
+
+def remap_state(
+    state: ScaleComState,
+    old_n: int,
+    new_n: int,
+    residue_dtype: str = "fp32",
+) -> ScaleComState:
+    """Elastic re-plan: fold/expand residue worker axes on membership change.
+
+    When the worker set changes (dropped worker, rejoin, regrouping after a
+    hierarchical re-plan), the EF residues must move to the new worker count
+    without losing the gradient mass they hold. The remap is MEAN-preserving:
+    ``mean_i m_i`` — the quantity the reduce's worker-axis mean feeds back
+    into ĝ — is invariant, so the trajectory picks up where it left off
+    instead of double-counting or dropping accumulated error.
+
+      expand (new_n = r·old_n)  each worker's residue is replicated to its r
+                                successors (repeat);
+      fold   (old_n = r·new_n)  each survivor absorbs the mean of the r
+                                workers folded into it;
+      general (e.g. 64 -> 63)   expand to lcm(old_n, new_n) then fold — both
+                                steps are mean-preserving, so arbitrary
+                                membership changes compose from the two
+                                primitives (transient memory scales with
+                                lcm/new_n; membership deltas are small in
+                                practice).
+
+    expand-then-fold round-trips BITWISE for fp32 residues with power-of-two
+    factors (repeat then mean of identical rows is exact). Lossy codecs
+    decode -> remap in fp32 -> re-encode (nearest rounding: no step counter
+    is advanced here, and the EF loop absorbs the re-quantization error).
+
+    ``state.t`` is preserved — the cyclic leader schedule continues modulo
+    the new worker count.
+    """
+    if old_n <= 0 or new_n <= 0:
+        raise ValueError(
+            f"remap_state worker counts must be positive, got {old_n} -> {new_n}"
+        )
+    codec = CODECS[residue_dtype]
+    lcm = old_n * new_n // math.gcd(old_n, new_n)
+    up, down = lcm // old_n, lcm // new_n
+    new_residues: Dict[str, Pytree] = {}
+    for path, enc in state.residues.items():
+        q = enc["q"]
+        if q.shape[0] != old_n:
+            raise ValueError(
+                f"remap_state: residue {path!r} has worker axis {q.shape[0]}, "
+                f"expected old_n={old_n} (was the state already remapped, or "
+                f"initialized for a different n_workers/groups?)"
+            )
+        # Decode against the *encoded* trailing shape: for the flat fp8
+        # layouts that is the padded buffer, and padded-size decode/encode
+        # round-trips exactly (the pad slice is the identity there).
+        shape = tuple(q.shape[1:])
+        m = codec.decode(enc, shape)
+        if up > 1:
+            m = jnp.repeat(m, up, axis=0)
+        if down > 1:
+            m = jnp.mean(m.reshape((new_n, down) + m.shape[1:]), axis=1)
+        new_residues[path] = codec.encode(m, shape, key=None)
+    return ScaleComState(residues=new_residues, t=state.t)
 
 
 def codec_roundtrip_error(

@@ -1,0 +1,64 @@
+"""Scale & failure scenario harness for the ScaleCom reduce.
+
+Sweeps worker counts (flat and hierarchical topologies), injects faults —
+stragglers, dropped/rejoining workers, stale or corrupt EF residues — around
+the genuine ``scalecom_reduce``, and asserts per-step invariants: gradient
+build-up bounded, trajectories within codec tolerance of the fault-free run,
+and comm-byte accounting matching ``core.plan``.
+
+Entry points:
+
+  ``python -m repro.harness --scenarios drop,straggler,stale --workers 8,64``
+  ``run_scenario(name, workers, ...)`` / ``run_buildup_sweep(...)`` from code.
+
+Submodules: ``scenarios`` (runner + registry), ``injectors`` (fault layer),
+``invariants`` (per-step checks), ``cli``.
+"""
+
+from repro.harness.injectors import (
+    CorruptResidueInjector,
+    DropRejoinInjector,
+    Injector,
+    StaleResidueInjector,
+    StepContext,
+    StragglerInjector,
+)
+from repro.harness.invariants import (
+    CODEC_TOL,
+    check_buildup,
+    check_comm_accounting,
+    check_trajectory,
+    codec_tolerance,
+)
+from repro.harness.scenarios import (
+    SCENARIOS,
+    ScenarioResult,
+    ScenarioSpec,
+    elastic_groups,
+    elastic_replan,
+    make_stream,
+    run_buildup_sweep,
+    run_scenario,
+)
+
+__all__ = [
+    "CODEC_TOL",
+    "CorruptResidueInjector",
+    "DropRejoinInjector",
+    "Injector",
+    "SCENARIOS",
+    "ScenarioResult",
+    "ScenarioSpec",
+    "StaleResidueInjector",
+    "StepContext",
+    "StragglerInjector",
+    "check_buildup",
+    "check_comm_accounting",
+    "check_trajectory",
+    "codec_tolerance",
+    "elastic_groups",
+    "elastic_replan",
+    "make_stream",
+    "run_buildup_sweep",
+    "run_scenario",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.harness`` — run the scenario sweep from the shell."""
+
+import sys
+
+from repro.harness.cli import main
+
+sys.exit(main())

@@ -1,0 +1,204 @@
+"""CLI for the scenario harness: ``python -m repro.harness``.
+
+Runs each requested scenario at each requested worker count, in both flat and
+hierarchical (``groups = workers // 4``) topology where the worker count
+allows it, plus the build-up sweep (local_topk O(n) vs clt_k flat, measured
+against ``analysis.perfmodel.buildup_ratio_model``). Results — per-step
+records, re-plan events, violations — land in ``BENCH_scenarios.json``
+(override with ``--out`` or the ``SCENARIOS_JSON`` env var) and any invariant
+violation makes the exit status non-zero.
+
+Examples::
+
+    python -m repro.harness --scenarios drop,straggler,stale --workers 8,64
+    python -m repro.harness --scenarios all --workers 8 --steps 10 --no-buildup
+    python -m repro.harness --list
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+__all__ = ["main", "run_cli"]
+
+DEFAULT_OUT = "BENCH_scenarios.json"
+
+
+def _provenance() -> dict:
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "device_kind": dev.device_kind,
+        "jax_backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+    }
+
+
+def _topologies(workers: int, hierarchical: bool) -> List[Optional[int]]:
+    """Flat always; hierarchical groups = workers // 4 when it divides."""
+    tops: List[Optional[int]] = [None]
+    if hierarchical:
+        g = workers // 4
+        if g >= 2 and workers % g == 0:
+            tops.append(g)
+    return tops
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.harness",
+        description="ScaleCom scale & failure scenario harness",
+    )
+    p.add_argument(
+        "--scenarios",
+        default="all",
+        help="comma-separated scenario names, or 'all' (see --list)",
+    )
+    p.add_argument(
+        "--workers",
+        default="8,16,32,64",
+        help="comma-separated worker counts to sweep",
+    )
+    p.add_argument("--steps", type=int, default=12, help="steps per run")
+    p.add_argument(
+        "--compressor",
+        default="clt_k",
+        help="compressor under fault injection (build-up sweep always "
+        "compares clt_k vs local_topk)",
+    )
+    p.add_argument("--chunk", type=int, default=16)
+    p.add_argument("--topm", type=int, default=1)
+    p.add_argument(
+        "--residue-dtype",
+        default="fp32",
+        choices=("fp32", "bf16", "fp8", "fp8_ec"),
+        help="EF residue codec (sets the trajectory tolerance)",
+    )
+    p.add_argument(
+        "--flat-only",
+        action="store_true",
+        help="skip the hierarchical (groups = workers // 4) topology",
+    )
+    p.add_argument(
+        "--no-buildup",
+        action="store_true",
+        help="skip the build-up sweep",
+    )
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument(
+        "--out",
+        default=None,
+        help=f"result JSON path (default {DEFAULT_OUT}; env SCENARIOS_JSON)",
+    )
+    p.add_argument("--list", action="store_true", help="list scenarios and exit")
+    p.add_argument("-q", "--quiet", action="store_true")
+    return p
+
+
+def run_cli(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    from repro.harness.scenarios import SCENARIOS, run_buildup_sweep, run_scenario
+
+    if args.list:
+        for spec in SCENARIOS.values():
+            print(f"{spec.name:12s} {spec.description}")
+        return 0
+
+    names = (
+        list(SCENARIOS)
+        if args.scenarios == "all"
+        else [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    )
+    unknown = [n for n in names if n not in SCENARIOS]
+    if unknown:
+        print(
+            f"unknown scenario(s): {', '.join(unknown)} "
+            f"(have: {', '.join(SCENARIOS)})",
+            file=sys.stderr,
+        )
+        return 2
+    workers_list = [int(w) for w in args.workers.split(",") if w.strip()]
+
+    say = (lambda *a, **k: None) if args.quiet else print
+    results = []
+    all_violations: List[str] = []
+    for workers in workers_list:
+        for groups in _topologies(workers, not args.flat_only):
+            for name in names:
+                res = run_scenario(
+                    name,
+                    workers,
+                    steps=args.steps,
+                    compressor=args.compressor,
+                    chunk=args.chunk,
+                    topm=args.topm,
+                    groups=groups,
+                    residue_dtype=args.residue_dtype,
+                    seed=args.seed,
+                )
+                results.append(res.to_json())
+                topo = "flat" if groups is None else f"groups={groups}"
+                status = "ok" if res.passed else "VIOLATION"
+                say(
+                    f"[{status:9s}] {name:10s} n={workers:<3d} {topo:10s} "
+                    f"dist={res.final_distance:.4f}/{res.tolerance:.4f} "
+                    f"buildup={res.mean_buildup:.2f} replans={len(res.replans)}"
+                )
+                for v in res.violations:
+                    say(f"            {v}")
+                all_violations.extend(
+                    f"{name}@n={workers}/{topo}: {v}" for v in res.violations
+                )
+
+    buildup = None
+    if not args.no_buildup:
+        buildup = run_buildup_sweep(
+            tuple(workers_list), chunk=args.chunk, topm=args.topm, seed=args.seed
+        )
+        for row in buildup["rows"]:
+            say(
+                f"[buildup  ] n={int(row['workers']):<3d} "
+                f"clt_k={row['clt_k']:.3f} local_topk={row['local_topk']:.3f} "
+                f"(model {row['local_topk_model']:.3f})"
+            )
+        all_violations.extend(buildup["violations"])
+
+    out_path = args.out or os.environ.get("SCENARIOS_JSON") or DEFAULT_OUT
+    payload = {
+        "provenance": _provenance(),
+        "config": {
+            "scenarios": names,
+            "workers": workers_list,
+            "steps": args.steps,
+            "compressor": args.compressor,
+            "chunk": args.chunk,
+            "topm": args.topm,
+            "residue_dtype": args.residue_dtype,
+            "seed": args.seed,
+        },
+        "results": results,
+        "buildup": buildup,
+        "violations": all_violations,
+        "passed": not all_violations,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    say(
+        f"{len(results)} runs, {len(all_violations)} violation(s) -> {out_path}"
+    )
+    if all_violations:
+        for v in all_violations:
+            print(f"VIOLATION: {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> int:
+    return run_cli()

@@ -1,0 +1,191 @@
+"""Fault injectors — the failure layer the scenario harness wraps around
+``scalecom_reduce``.
+
+Design rule (the async/sync actor split, grl2-style): the *system* under test
+is untouched. An injector only transforms what the real system would see —
+the per-worker gradient stream, the persistent EF state, and the membership
+set — **before** the genuine ``scalecom_reduce`` call, and observes state
+**after** it. Nothing here reaches into the reduce's numerics, so a scenario
+failure is always attributable to the algorithm's response to the fault, not
+to harness instrumentation.
+
+The hooks, called by ``scenarios._simulate`` each step:
+
+  membership(t, world)   which worker ids contribute this step (dropped /
+                         rejoining workers); a change triggers the elastic
+                         re-plan path (plan-time divisibility / state-drift
+                         validation, ``core.state.remap_state``).
+  inject(ctx, stream)    mutate the StepContext: replace gradient rows
+                         (straggler delay), revert or corrupt residue rows.
+  observe(t, state)      post-step snapshot window (stale-residue injection
+                         needs the true historical state to rewind to).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import ScaleComState
+
+Array = jnp.ndarray
+Pytree = Any
+# stream(t, worker_ids) -> pytree of (len(worker_ids), *shape) gradients
+Stream = Callable[[int, Tuple[int, ...]], Pytree]
+
+__all__ = [
+    "StepContext",
+    "Injector",
+    "StragglerInjector",
+    "DropRejoinInjector",
+    "StaleResidueInjector",
+    "CorruptResidueInjector",
+]
+
+
+@dataclasses.dataclass
+class StepContext:
+    """Everything one reduce step consumes, exposed to the injector."""
+
+    t: int
+    active: Tuple[int, ...]  # worker ids stacked on the gradient axis
+    grads_pw: Pytree  # (len(active), *shape) per tensor
+    state: ScaleComState
+    notes: Dict[str, Any]  # injector annotations, copied into the record
+
+
+class Injector:
+    """No-fault base: identity membership, identity inject, no observation."""
+
+    def membership(self, t: int, world: Tuple[int, ...]) -> Tuple[int, ...]:
+        return world
+
+    def inject(self, ctx: StepContext, stream: Stream) -> StepContext:
+        return ctx
+
+    def observe(self, t: int, state: ScaleComState) -> None:
+        pass
+
+
+def _replace_worker_row(grads_pw: Pytree, row: int, replacement: Pytree) -> Pytree:
+    """Swap one worker-axis row of the stacked gradient tree."""
+    return jax.tree.map(
+        lambda g, r: g.at[row].set(r[0]), grads_pw, replacement
+    )
+
+
+@dataclasses.dataclass
+class StragglerInjector(Injector):
+    """Worker ``worker`` is ``delay`` steps behind: from ``start`` on, its
+    contribution at step t is its own gradient from step t - delay — the
+    stale-gradient regime DGC shows EF memory is sensitive to."""
+
+    worker: int = 1
+    delay: int = 2
+    start: int = 3
+
+    def inject(self, ctx: StepContext, stream: Stream) -> StepContext:
+        if ctx.t < self.start or self.worker not in ctx.active:
+            return ctx
+        row = ctx.active.index(self.worker)
+        stale_t = max(ctx.t - self.delay, 0)
+        stale = stream(stale_t, (self.worker,))
+        ctx.grads_pw = _replace_worker_row(ctx.grads_pw, row, stale)
+        ctx.notes["straggler"] = {"worker": self.worker, "uses_step": stale_t}
+        return ctx
+
+
+@dataclasses.dataclass
+class DropRejoinInjector(Injector):
+    """Worker ``worker`` leaves at ``drop_at`` and rejoins at ``rejoin_at``.
+
+    Membership-only: the runner reacts to the changed worker set with the
+    elastic re-plan path (stale-plan ValueError at plan time, group re-plan,
+    ``remap_state`` worker-axis fold/expand). A 64-worker world dropping to
+    63 is exactly the divisibility transition the plan-time guard exists for.
+    """
+
+    worker: int = 0
+    drop_at: int = 4
+    rejoin_at: int = 8
+
+    def membership(self, t: int, world: Tuple[int, ...]) -> Tuple[int, ...]:
+        if self.drop_at <= t < self.rejoin_at:
+            return tuple(w for w in world if w != self.worker)
+        return world
+
+
+@dataclasses.dataclass
+class StaleResidueInjector(Injector):
+    """At step ``at``, worker-row ``worker`` of every EF residue is reverted
+    to its value ``staleness`` steps earlier — a learner restored from an old
+    checkpoint while the rest of the fleet moved on. The un-reverted steps'
+    gradient mass is re-fed by error feedback, so the trajectory must pull
+    back within codec tolerance instead of drifting.
+
+    ``worker`` indexes the residue's worker axis (the *group* axis in
+    hierarchical mode).
+    """
+
+    worker: int = 1
+    at: int = 6
+    staleness: int = 3
+
+    def __post_init__(self):
+        self._history: Dict[int, Dict[str, Pytree]] = {}
+
+    def observe(self, t: int, state: ScaleComState) -> None:
+        if self.at - self.staleness <= t < self.at:
+            self._history[t] = jax.tree.map(lambda x: x, state.residues)
+        self._history = {
+            k: v for k, v in self._history.items() if k >= self.at - self.staleness
+        }
+
+    def inject(self, ctx: StepContext, stream: Stream) -> StepContext:
+        old_t = self.at - self.staleness
+        if ctx.t != self.at or old_t not in self._history:
+            return ctx
+        old = self._history[old_t]
+        residues = {}
+        for path, enc in ctx.state.residues.items():
+            row = self.worker % enc["q"].shape[0]
+            residues[path] = jax.tree.map(
+                lambda cur, prev: cur.at[row].set(prev[row]), enc, old[path]
+            )
+        ctx.state = ScaleComState(residues=residues, t=ctx.state.t)
+        ctx.notes["stale_residue"] = {"worker": self.worker, "reverted_to": old_t}
+        return ctx
+
+
+@dataclasses.dataclass
+class CorruptResidueInjector(Injector):
+    """At step ``at``, worker-row ``worker`` of every residue's quantized
+    payload is overwritten with finite garbage (``scale``-sized noise) — a
+    corrupted encoding (bit rot, a bad transfer) that still parses. Error
+    feedback flushes the garbage into one bounded ĝ perturbation and the
+    trajectory must re-enter codec tolerance by the end of the run.
+    """
+
+    worker: int = 0
+    at: int = 5
+    scale: float = 2.0
+    seed: int = 0x0BAD
+
+    def inject(self, ctx: StepContext, stream: Stream) -> StepContext:
+        if ctx.t != self.at:
+            return ctx
+        key = jax.random.PRNGKey(self.seed)
+        residues = {}
+        for i, (path, enc) in enumerate(sorted(ctx.state.residues.items())):
+            row = self.worker % enc["q"].shape[0]
+            garbage = self.scale * jax.random.normal(
+                jax.random.fold_in(key, i), enc["q"].shape[1:], jnp.float32
+            )
+            q = enc["q"].at[row].set(garbage.astype(enc["q"].dtype))
+            residues[path] = {**enc, "q": q}
+        ctx.state = ScaleComState(residues=residues, t=ctx.state.t)
+        ctx.notes["corrupt_residue"] = {"worker": self.worker, "scale": self.scale}
+        return ctx

@@ -63,6 +63,12 @@ def main(argv=None):
                          "optimization_barrier ordering hints (the "
                          "synchronous per-bucket fallback; numerics are "
                          "identical either way)")
+    ap.add_argument("--preflight-scenarios", default=None, metavar="NAMES",
+                    help="before training, run the failure-scenario harness "
+                         "(repro.harness) at this worker count / compressor / "
+                         "groups / residue dtype: comma-separated scenario "
+                         "names or 'all'. Any invariant violation — or a "
+                         "topology the planner rejects — aborts the launch")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -72,6 +78,28 @@ def main(argv=None):
     cfg = registry.smoke(args.arch) if args.arch in registry._MODULES else None
     if cfg is None:
         raise SystemExit(f"unknown arch {args.arch}; choices: {list(registry._MODULES)}")
+
+    if args.preflight_scenarios:
+        from repro.harness.scenarios import SCENARIOS, run_scenario
+
+        names = (
+            list(SCENARIOS)
+            if args.preflight_scenarios == "all"
+            else [s.strip() for s in args.preflight_scenarios.split(",") if s.strip()]
+        )
+        for name in names:
+            res = run_scenario(
+                name, args.workers, compressor=args.compressor,
+                chunk=args.chunk, groups=args.groups,
+                residue_dtype=args.residue_dtype,
+            )
+            print(f"[launch.train] preflight {name}: "
+                  f"dist={res.final_distance:.4f}/{res.tolerance:.4f} "
+                  f"{'ok' if res.passed else 'VIOLATION'}")
+            if not res.passed:
+                for v in res.violations:
+                    print(f"[launch.train]   {v}")
+                raise SystemExit(f"preflight scenario {name!r} failed")
 
     print(f"[launch.train] {jax_compat.describe()}")
     if args.residue_dtype.startswith("fp8") and not jax_compat.has_float8():

@@ -1,0 +1,241 @@
+"""Scenario harness + the PR's regression fixes: plan-time group/state
+validation, random_k tail clamping, remap_state elasticity, and the
+fault-scenario invariants (build-up bound, EF recovery, comm accounting)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.perfmodel import buildup_ratio_model
+from repro.core.compressors import CompressorConfig, compress
+from repro.core.plan import plan_tensors
+from repro.core.scalecom import ScaleComConfig, scalecom_reduce
+from repro.core.state import CODECS, init_state, remap_state, residue_signature
+from repro.harness import (
+    DropRejoinInjector,
+    check_buildup,
+    check_comm_accounting,
+    check_trajectory,
+    elastic_groups,
+    run_scenario,
+)
+
+
+def _cfg(**kw):
+    kw.setdefault("compressor", CompressorConfig("clt_k", chunk=16))
+    kw.setdefault("min_size", 1)
+    return ScaleComConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: group divisibility is validated at plan time (not a bare
+# assert that `python -O` strips)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rejects_indivisible_groups():
+    cfg = _cfg(groups=3)
+    leaves = (("['w']", (8, 64), 8),)
+    with pytest.raises(ValueError) as e:
+        plan_tensors(leaves, cfg, frozenset({"['w']"}))
+    msg = str(e.value)
+    assert "n=8" in msg and "groups=3" in msg and "['w']" in msg
+
+
+def test_config_rejects_nonpositive_groups():
+    with pytest.raises(ValueError):
+        _cfg(groups=0)
+
+
+def test_elastic_groups_picks_largest_divisor():
+    assert elastic_groups(63, 16) == 9
+    assert elastic_groups(64, 16) == 16
+    assert elastic_groups(7, 2) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: random_k tail chunks — billed values must be delivered
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topm", [1, 3])
+def test_random_k_tail_indices_in_bounds(topm):
+    """size=40, chunk=16: the tail chunk covers 8 real elements. Draws that
+    land in the zero padding were silently dropped from ĝ while the plan
+    still billed them; draws must stay inside the real tail."""
+    size = 40
+    ef = jnp.arange(4 * size, dtype=jnp.float32).reshape(4, size) + 1.0
+    cfg = CompressorConfig("random_k", chunk=16, topm=topm)
+    for t in range(20):
+        _, idx, dense = compress(ef, jnp.int32(t), cfg)
+        assert int(jnp.max(idx)) < size, f"t={t}: index past the real data"
+        # every billed slot delivers: nnz(ĝ) == k (inputs are all nonzero,
+        # and per-chunk draws are distinct)
+        k = -(-size // cfg.chunk) * topm
+        assert int(jnp.sum(dense != 0)) == k
+
+
+def test_random_k_multiple_size_unchanged():
+    """The tail guard is a no-op when size is a chunk multiple (flat and
+    rowwise views stay bitwise identical)."""
+    size = 48
+    ef = jnp.arange(2 * size, dtype=jnp.float32).reshape(2, size) + 1.0
+    cfg = CompressorConfig("random_k", chunk=16)
+    _, idx, _ = compress(ef, jnp.int32(3), cfg)
+    assert int(jnp.max(idx)) < size
+    assert idx.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: layout / worker-count / codec drift between init_state and
+# the config is caught at plan time with remediation
+# ---------------------------------------------------------------------------
+
+
+def test_state_drift_layout_error_names_both_layouts():
+    params = {"w": jnp.zeros((24, 96), jnp.float32)}
+    state = init_state(params, 4, min_size=1, layout="rowwise")
+    cfg = _cfg(layout="flat")
+    leaves = (("['w']", (24, 96), 4),)
+    with pytest.raises(ValueError) as e:
+        plan_tensors(leaves, cfg, residue_signature(state.residues))
+    msg = str(e.value)
+    assert "flat" in msg and "rowwise" in msg
+    assert "re-init" in msg and "layout" in msg
+
+
+def test_state_drift_worker_count_mentions_remap():
+    params = {"w": jnp.zeros((24, 96), jnp.float32)}
+    state = init_state(params, 8, min_size=1)
+    cfg = _cfg()
+    leaves = (("['w']", (24, 96), 4),)  # 4 workers now, residues have 8 rows
+    with pytest.raises(ValueError) as e:
+        plan_tensors(leaves, cfg, residue_signature(state.residues))
+    assert "remap_state" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# satellite: remap_state (the elastic re-plan primitive)
+# ---------------------------------------------------------------------------
+
+
+def _populated_state(n, residue_dtype="fp32"):
+    params = {"w": jnp.zeros((24, 96), jnp.float32)}
+    state = init_state(params, n, residue_dtype, min_size=1)
+    cfg = _cfg(residue_dtype=residue_dtype)
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (n, 24, 96))}
+    _, state, _ = scalecom_reduce(grads, state, cfg)
+    return state
+
+
+def test_remap_expand_then_fold_is_bitwise_fp32():
+    state4 = _populated_state(4)
+    state8 = remap_state(state4, 4, 8)
+    back = remap_state(state8, 8, 4)
+    for path, enc in state4.residues.items():
+        np.testing.assert_array_equal(
+            np.asarray(enc["q"]), np.asarray(back.residues[path]["q"])
+        )
+    assert back.t == state4.t
+
+
+def test_remap_preserves_worker_mean():
+    state4 = _populated_state(4)
+    state3 = remap_state(state4, 4, 3)  # lcm path: expand x3, fold x4
+    codec = CODECS["fp32"]
+    for path, enc in state4.residues.items():
+        shape = enc["q"].shape[1:]
+        before = jnp.mean(codec.decode(enc, shape), axis=0)
+        after = jnp.mean(codec.decode(state3.residues[path], shape), axis=0)
+        np.testing.assert_allclose(
+            np.asarray(before), np.asarray(after), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_remap_rejects_wrong_old_n():
+    state4 = _populated_state(4)
+    with pytest.raises(ValueError):
+        remap_state(state4, 8, 2)
+
+
+# ---------------------------------------------------------------------------
+# harness invariants
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _scenario(name, workers, **kw):
+    return run_scenario(name, workers, steps=10, **dict(kw))
+
+
+def test_stale_residue_recovers_within_codec_tolerance():
+    res = _scenario("stale", 8)
+    assert res.passed, res.violations
+    assert res.final_distance < res.tolerance
+
+
+def test_drop_rejoin_runs_elastic_replan():
+    res = _scenario("drop", 8)
+    assert res.passed, res.violations
+    assert len(res.replans) == 2  # leave + rejoin
+    assert res.replans[0]["rows_before"] == 8
+    assert res.replans[0]["rows_after"] == 7
+    # the stale plan failed LOUDLY at plan time before the re-plan
+    assert res.replans[0]["stale_plan_error"]
+
+
+def test_comm_accounting_matches_plan_every_step():
+    res = _scenario("straggler", 8)
+    assert res.passed, res.violations
+    for r in res.records:
+        assert check_comm_accounting(r["comm_bytes"], r["comm_planned"]) is None
+
+
+@functools.lru_cache(maxsize=None)
+def _buildup(compressor, workers):
+    return run_scenario(
+        "baseline", workers, steps=4, compressor=compressor,
+        sigma=1.0, base_scale=0.05,
+    )
+
+
+def test_buildup_bound_local_topk_g32():
+    """ISSUE acceptance: at G=32, local_topk's measured build-up stays under
+    the union-average model bound — O(n) but bounded — while clt_k holds the
+    flat curve."""
+    res = _buildup("local_topk", 32)
+    assert res.passed, res.violations
+    model = buildup_ratio_model(32, 16)
+    assert res.mean_buildup <= 1.10 * model
+    assert res.mean_buildup > 2.0  # the growth is real, not a degenerate 1
+
+    flat = _buildup("clt_k", 32)
+    assert flat.passed, flat.violations
+    assert flat.mean_buildup <= 1.0 + 1e-6
+
+
+def test_check_buildup_flags_violations():
+    assert check_buildup(1.5, "clt_k", 8, 16) is not None
+    assert check_buildup(0.9, "clt_k", 8, 16) is None
+    model = buildup_ratio_model(8, 16)
+    assert check_buildup(model * 2.0, "local_topk", 8, 16) is not None
+    assert check_buildup(model * 0.9, "local_topk", 8, 16) is None
+
+
+def test_check_trajectory_scales_with_codec():
+    assert check_trajectory(0.04, "fp32") is None
+    assert check_trajectory(0.06, "fp32") is not None
+    assert check_trajectory(0.2, "fp8") is None
+
+
+def test_drop_rejoin_membership_windows():
+    injector = DropRejoinInjector(worker=2, drop_at=3, rejoin_at=6)
+    world = (0, 1, 2, 3)
+    assert injector.membership(0, world) == world
+    assert injector.membership(3, world) == (0, 1, 3)
+    assert injector.membership(5, world) == (0, 1, 3)
+    assert injector.membership(6, world) == world
