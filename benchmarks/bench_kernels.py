@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import Row, time_fn
 from repro.backends import pallas_available, resolve_backend
+from repro.obs.provenance import device_tags as _device_tags
+from repro.obs.provenance import provenance
 
 SIZES = (1 << 16, 1 << 20)
 CHUNK = 64
@@ -35,16 +37,6 @@ JSON_PATH = os.environ.get("SCALECOM_BENCH_JSON", "BENCH_kernels.json")
 def _backends() -> tuple[str, ...]:
     # jnp rows must survive jax builds without the pallas package
     return ("jnp", "pallas") if pallas_available() else ("jnp",)
-
-
-def _device_tags(backend_name: str) -> dict:
-    """Provenance tags stamped on every record: interpret-mode pallas numbers
-    must never be mistaken for TPU results (they time the interpreter)."""
-    return {
-        "device_kind": jax.devices()[0].device_kind,
-        "jax_backend": jax.default_backend(),
-        "interpret": backend_name == "pallas" and jax.default_backend() != "tpu",
-    }
 
 
 def _interpret_banner() -> None:
@@ -149,6 +141,7 @@ def run() -> list[Row]:
     summary = {
         "device": jax.devices()[0].device_kind,
         "default_backend": jax.default_backend(),
+        "provenance": provenance(),
         "chunk": CHUNK,
         "parity_ok": ok,
         "entries": entries,

@@ -30,6 +30,8 @@ from repro.backends import pallas_available, resolve_backend
 from repro.core.compressors import CompressorConfig
 from repro.core.scalecom import ScaleComConfig, scalecom_reduce
 from repro.core.state import init_state
+from repro.obs.provenance import device_tags as _device_tags
+from repro.obs.provenance import provenance
 
 JSON_PATH = os.environ.get("SCALECOM_BENCH_OVERLAP_JSON", "BENCH_overlap.json")
 
@@ -41,14 +43,6 @@ BUCKET_MBS = (0.0, 0.125, 0.5)  # 0 = unbucketed single-shot launch
 COMPRESSORS = ("clt_k", "local_topk")
 _SCHEME = {"clt_k": "scalecom", "true_topk": "scalecom", "random_k": "scalecom",
            "local_topk": "local_topk", "none": "none"}
-
-
-def _device_tags(backend_name: str) -> dict:
-    return {
-        "device_kind": jax.devices()[0].device_kind,
-        "jax_backend": jax.default_backend(),
-        "interpret": backend_name == "pallas" and jax.default_backend() != "tpu",
-    }
 
 
 def _measure(backend_name: str, compressor: str, bucket_mb: float) -> float:
@@ -141,6 +135,7 @@ def run() -> list[Row]:
     summary = {
         "device": jax.devices()[0].device_kind,
         "default_backend": jax.default_backend(),
+        "provenance": provenance(),
         "n_workers": N_WORKERS,
         "chunk": CHUNK,
         "entries": entries,

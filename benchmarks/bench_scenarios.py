@@ -29,6 +29,7 @@ STEPS = 10
 def run() -> list[Row]:
     from repro.analysis.perfmodel import buildup_ratio_model
     from repro.harness.scenarios import DEFAULT_CHUNK, run_buildup_sweep, run_scenario
+    from repro.obs.provenance import provenance
 
     rows: list[Row] = []
     results = []
@@ -64,7 +65,12 @@ def run() -> list[Row]:
     violations += sweep["violations"]
     with open(JSON_PATH, "w") as f:
         json.dump(
-            {"results": results, "buildup": sweep, "violations": violations},
+            {
+                "provenance": provenance(),
+                "results": results,
+                "buildup": sweep,
+                "violations": violations,
+            },
             f,
             indent=1,
         )

@@ -5,12 +5,20 @@ compare against the uncompressed baseline — the paper's Table-2 experiment in
     PYTHONPATH=src python examples/quickstart.py
 
 Hacking on the repo? The static invariant checker (compat boundary, tracer
-hygiene, wire-byte coverage, collective schedule) is
+hygiene, wire-byte coverage, collective schedule, obs hot path) is
 ``PYTHONPATH=src python -m repro.analysis.scalecheck`` — see ROADMAP.md
 "Static checks". The scale & failure scenario harness (worker sweeps with
 straggler/drop/stale-residue faults and per-step invariants) is
 ``PYTHONPATH=src python -m repro.harness --scenarios all --workers 8`` —
-see ROADMAP.md "Scenario harness".
+see ROADMAP.md "Scenario harness". Want to see INSIDE a run? The telemetry
+subsystem (ROADMAP.md "Observability") records jit-safe taps (measured wire
+bytes, build-up, contraction gamma) + wall-clock spans:
+
+    PYTHONPATH=src python -m repro.launch.train --steps 40 \\
+        --trace-dir /tmp/trace --metrics-every 10
+    PYTHONPATH=src python -m repro.obs.report /tmp/trace/events.jsonl
+
+then load /tmp/trace/trace.json in chrome://tracing or Perfetto.
 """
 
 import sys
@@ -19,6 +27,7 @@ sys.path.insert(0, "src")
 
 import jax
 
+from repro import obs
 from repro.configs import registry
 from repro.core.compressors import CompressorConfig
 from repro.core.scalecom import ScaleComConfig
@@ -74,6 +83,9 @@ def overlap_preview(bucket_mb: float = 25.0):
 
 
 if __name__ == "__main__":
+    # run_training logs through the (silent-by-default) repro logger;
+    # a console consumer opts in:
+    obs.enable_console_logging()
     dense = train("none")
     scalecom = train("clt_k", chunk=64, beta=1.0)
     print(f"\nfinal loss  dense={dense:.4f}  scalecom(64x)={scalecom:.4f}  "

@@ -35,6 +35,16 @@ location in its findings:
                     a compressor without an index-byte case would crash the
                     plan stage; an index-byte case without a compressor is a
                     stale wire-format entry.
+  obs-hot-path      inside functions reachable from the jitted reduce path:
+                    no host callbacks (``print``, ``jax.debug.print``,
+                    ``io_callback``, ``pure_callback``), no wall-clock reads
+                    (``time.perf_counter`` & co.), and no obs timer spans
+                    (``tracer.span(...)`` / ``.instant(...)``). The telemetry
+                    contract (repro.obs): in-trace observability is TAPS ONLY
+                    (repro.obs.taps — pure pytree leaves); wall-clock spans
+                    wrap jitted calls from OUTSIDE. A callback in the hot
+                    path costs a device sync per step; a clock read there
+                    times trace construction, not execution.
 """
 
 from __future__ import annotations
@@ -421,6 +431,94 @@ def _pair_by_dir(
         if best is not None:
             pairs.append((plan, best))
     return pairs
+
+
+# ---------------------------------------------------------------------------
+# obs-hot-path
+# ---------------------------------------------------------------------------
+
+# Host-side escape hatches: each forces a device round-trip (or worse, a
+# host callback embedded in the compiled computation) when called under jit.
+_HOST_CALLBACKS = {
+    "print",
+    "jax.debug.print",
+    "jax.debug.callback",
+    "jax.debug.breakpoint",
+    "jax.experimental.io_callback",
+    "io_callback",
+    "jax.pure_callback",
+    "pure_callback",
+}
+
+# Wall-clock reads: meaningless inside a traced function (they time tracing,
+# which happens once, not execution) — spans belong OUTSIDE the jitted call.
+_WALL_CLOCKS = {
+    "time.time",
+    "time.perf_counter",
+    "time.monotonic",
+    "time.process_time",
+    "perf_counter",
+    "monotonic",
+}
+
+# obs timer entry points (Tracer.span / Tracer.instant): method-call names,
+# matched on the attribute so `tracer.span(...)` and `self.tracer.span(...)`
+# both fire.
+_OBS_TIMER_ATTRS = {"span", "instant"}
+
+
+@register_rule(
+    "obs-hot-path",
+    "ast",
+    "host callback / wall-clock read / obs timer span in the jitted reduce path",
+)
+def check_obs_hot_path(sources: Sequence[SourceFile]) -> List[Finding]:
+    out: List[Finding] = []
+    for fn, reached in reachable_functions(sources, _TRACED_ROOTS):
+        if not reached:
+            continue
+        src = fn.src
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted in _HOST_CALLBACKS:
+                out.append(
+                    src.finding(
+                        "obs-hot-path",
+                        node.lineno,
+                        f"{dotted}(...) in {fn.name!r} (reachable from the "
+                        "jitted reduce path): host callbacks embed a device "
+                        "sync per step — thread values out as obs taps "
+                        "(repro.obs.taps) instead",
+                    )
+                )
+            elif dotted in _WALL_CLOCKS:
+                out.append(
+                    src.finding(
+                        "obs-hot-path",
+                        node.lineno,
+                        f"{dotted}(...) in {fn.name!r} (reachable from the "
+                        "jitted reduce path): a wall clock inside a traced "
+                        "function times trace construction, not execution — "
+                        "span the jitted call from outside (repro.obs.tracing)",
+                    )
+                )
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _OBS_TIMER_ATTRS
+            ):
+                out.append(
+                    src.finding(
+                        "obs-hot-path",
+                        node.lineno,
+                        f".{node.func.attr}(...) in {fn.name!r} (reachable from "
+                        "the jitted reduce path): obs timer spans wrap jitted "
+                        "calls from outside; in-trace observability is taps "
+                        "only (repro.obs.taps)",
+                    )
+                )
+    return out
 
 
 @register_rule(

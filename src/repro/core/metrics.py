@@ -6,8 +6,11 @@
   * histogram-overlap between local top-k and true top-k      (Fig. 2b/2d)
   * Q-Q style rank correlation (Spearman)                     (Appendix A)
 
-These run on worker-stacked flat tensors (n, size) and are cheap enough to sample
-every N steps from the training loop (``metrics_every``).
+These run on worker-stacked flat tensors (n, size) and are cheap enough to
+sample every N steps: with ``ScaleComConfig(telemetry=True, metrics_every=N)``
+the reduce samples ``residue_similarity_report`` per tensor behind a lax.cond
+on the step counter and threads the values out as ``obs/`` tap leaves
+(core.scalecom._tap_execute; summarized by ``python -m repro.obs.report``).
 """
 
 from __future__ import annotations
@@ -26,6 +29,7 @@ __all__ = [
     "contraction_gamma",
     "topk_overlap",
     "spearman_rho",
+    "residue_similarity_report",
 ]
 
 

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from repro.compat import jax_compat
 from repro.core.plan import Bucket, plan_buckets
+from repro.obs import taps
 
 Array = jnp.ndarray
 
@@ -137,7 +138,8 @@ def init_token() -> Array:
 
 
 def stage_bucket(
-    leaves: Sequence[Array], token: Array, *, overlap: bool = True
+    leaves: Sequence[Array], token: Array, *, overlap: bool = True,
+    bucket: Optional[int] = None,
 ) -> Tuple[List[Array], Array]:
     """Stage one bucket's gradient leaves behind the scheduler token.
 
@@ -146,7 +148,18 @@ def stage_bucket(
     the previous bucket's collective. Identity on values. With
     ``overlap=False`` (or no optimization_barrier on this jax) the leaves
     pass through untouched — the synchronous fallback.
+
+    ``bucket`` is the schedule index for the telemetry tap (a static count of
+    staged leaves per bucket, repro.obs.taps — a trace-time no-op unless a
+    telemetry collector is open); it never affects the staged values.
     """
+    if bucket is not None:
+        taps.tap(
+            "bucket_staged_leaves",
+            jnp.asarray(len(leaves), jnp.float32),
+            bucket=bucket,
+            overlap=overlap,
+        )
     if not overlap or not jax_compat.has_optimization_barrier():
         return list(leaves), token
     staged, token = jax_compat.optimization_barrier((tuple(leaves), token))

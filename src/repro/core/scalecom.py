@@ -92,8 +92,10 @@ from repro.core.compressors import (
 )
 from repro.core import overlap
 from repro.core.filter import lowpass_update
+from repro.core.metrics import residue_similarity_report
 from repro.core.plan import TensorPlan, plan_tensors
 from repro.core.state import CODECS, ScaleComState, codec_key, residue_signature
+from repro.obs import taps
 
 Array = jnp.ndarray
 Pytree = Any
@@ -133,6 +135,19 @@ class ScaleComConfig:
                     collectives with remaining backward compute (core.overlap);
                     False forces the synchronous per-bucket fallback. No
                     effect on numerics either way.
+    telemetry:      emit the repro.obs metric taps as extra ``"obs/..."``
+                    leaves of the returned stats dict (measured wire bytes vs
+                    the plan, build-up nnz/k, per-tensor contraction gamma,
+                    codec roundtrip error, similarity samples). Jit-safe aux
+                    outputs only — never host callbacks — so the primary
+                    outputs stay BITWISE identical to telemetry=False and the
+                    trace is retrace-deterministic (tests/test_obs.py).
+                    False (default) stages nothing: the taps are trace-time
+                    no-ops.
+    metrics_every:  sample core.metrics.residue_similarity_report every this
+                    many steps (a lax.cond on the step counter, so one trace
+                    serves sampled and unsampled steps). 0 disables; only
+                    meaningful with telemetry=True.
     """
 
     compressor: CompressorConfig = CompressorConfig()
@@ -145,6 +160,8 @@ class ScaleComConfig:
     warmup_steps: int = 0
     bucket_bytes: int = 25 << 20
     overlap: bool = True
+    telemetry: bool = False
+    metrics_every: int = 0
     # per-tensor compression-rate rules (paper §4 guidance); first match wins,
     # chunk=None => dense. Tuple of core.rates.RateRule.
     rate_rules: Tuple = ()
@@ -162,6 +179,11 @@ class ScaleComConfig:
                 f"groups must be a positive worker-group count or None, got "
                 f"{self.groups} (divisibility against the actual worker count "
                 f"is checked per tensor at plan time)"
+            )
+        if self.metrics_every < 0:
+            raise ValueError(
+                f"metrics_every must be >= 0 (0 disables similarity "
+                f"sampling), got {self.metrics_every}"
             )
 
     def n_workers(self, data_ranks: int) -> int:
@@ -200,7 +222,11 @@ def dense_reduce(grads_pw: Pytree) -> Pytree:
 
 
 def _execute_exact(ef: Array, t: Array, comp: CompressorConfig, backend):
-    """Dense top-k analysis path (comp.exact): non-chunked compress()."""
+    """Dense top-k analysis path (comp.exact): non-chunked compress().
+
+    Also returns the (vals, idx) wire payload so the telemetry taps can
+    measure transmitted bytes uniformly across the exact and chunked paths.
+    """
     size = ef.shape[-1]
     vals, idx, ghat = compress(ef, t, comp, backend=backend)
     if comp.name == "local_topk":
@@ -211,7 +237,111 @@ def _execute_exact(ef: Array, t: Array, comp: CompressorConfig, backend):
         own = jax.vmap(
             lambda v: jnp.zeros((size,), ef.dtype).at[idx].set(v, mode="drop")
         )(vals)
-    return ghat, own
+    return ghat, own, vals, idx
+
+
+# Fixed key order of the residue_similarity_report bundle: both lax.cond
+# branches of the metrics_every sampler must build the SAME output structure,
+# and the tap keys must be retrace-deterministic.
+_SIMILARITY_KEYS = (
+    "pairwise_cosine_distance",
+    "hamming_d_over_k",
+    "topk_energy_overlap",
+    "spearman_rho",
+)
+
+
+def _tap_execute(
+    plan: TensorPlan,
+    codec,
+    ef: Array,
+    vals: Array,
+    idx: Array,
+    ghat: Array,
+    new_m: Array,
+    new_enc,
+    t: Array,
+    metrics_every: int,
+) -> None:
+    """Per-tensor telemetry taps (only runs while a taps collector is open).
+
+    Everything here is ordinary traced jnp feeding aux outputs — no host
+    callbacks, no timers (the obs-hot-path scalecheck rule rejects those on
+    any function reachable from scalecom_reduce). Labels are static plan
+    metadata, so tap keys are identical on every retrace.
+    """
+    comp = plan.comp
+    G = ef.shape[0]
+    # Measured per-worker wire bytes from the ACTUAL traced payload shapes,
+    # against the plan's one byte rule (core.plan._INDEX_BYTES): values are
+    # always 4 * k; the shared-index broadcast amortizes over G workers,
+    # local_topk ships each worker's own set, random_k re-derives from the
+    # shared step counter.
+    value_bytes = 4.0 * (vals.size // G)
+    if comp.name == "local_topk":
+        index_bytes = 4.0 * (idx.size // G)
+    elif comp.name == "random_k":
+        index_bytes = 0.0
+    else:
+        index_bytes = 4.0 * idx.size / G
+    labels = dict(path=plan.path, compressor=comp.name)
+    taps.tap(
+        "bytes_measured",
+        jnp.asarray(value_bytes + index_bytes, jnp.float32),
+        **labels,
+    )
+    taps.tap(
+        "bytes_planned", jnp.asarray(plan.bytes_payload, jnp.float32), **labels
+    )
+    # Gradient build-up: nnz(ĝ) vs the k values each worker contributed —
+    # ~1 for the shared-index compressors, the O(n) union for local_topk
+    # (paper Fig. 5; analysis.perfmodel.buildup_ratio_model).
+    taps.tap(
+        "buildup_nnz",
+        jnp.count_nonzero(ghat).astype(jnp.float32),
+        path=plan.path,
+    )
+    taps.tap("buildup_k", jnp.asarray(plan.k, jnp.float32), path=plan.path)
+    # Codec roundtrip: how much of the residue the storage codec loses this
+    # step (0 for fp32; the contraction the EF loop must absorb for
+    # bf16/fp8). Telemetry-only extra decode — never staged when off.
+    m_stored = new_m.reshape((G,) + plan.storage)
+    decoded = codec.decode(new_enc, plan.storage)
+    taps.tap(
+        "codec_roundtrip_err",
+        jnp.linalg.norm(decoded - m_stored)
+        / jnp.maximum(jnp.linalg.norm(m_stored), 1e-30),
+        path=plan.path,
+        codec=codec.name,
+    )
+    # metrics_every sampling of the paper's similarity diagnostics, as a
+    # lax.cond on the traced step counter: one trace serves both the sampled
+    # and unsampled steps (no retrace drift), and the "sampled" flag tap
+    # tells the report which steps carry real values. Needs >= 2 workers
+    # (pairwise distance) — G is static, so this is a trace-time gate.
+    if metrics_every > 0 and G >= 2:
+        ef2 = ef.reshape(G, -1)
+        kk = max(1, min(plan.k, ef2.shape[1]))
+
+        def _sampled(e):
+            rep = residue_similarity_report(e, kk)
+            return tuple(
+                jnp.asarray(rep[name], jnp.float32) for name in _SIMILARITY_KEYS
+            )
+
+        def _skipped(e):
+            del e
+            return tuple(jnp.zeros((), jnp.float32) for _ in _SIMILARITY_KEYS)
+
+        sampled_now = (t % metrics_every) == 0
+        report = jax.lax.cond(sampled_now, _sampled, _skipped, ef2)
+        taps.tap(
+            "similarity_sampled",
+            sampled_now.astype(jnp.float32),
+            path=plan.path,
+        )
+        for name, value in zip(_SIMILARITY_KEYS, report):
+            taps.tap(name, value, path=plan.path)
 
 
 def _execute(
@@ -224,6 +354,7 @@ def _execute(
     enc_key,
     backend,
     compute_stats: bool,
+    metrics_every: int = 0,
 ):
     """Algorithm 1 over the plan's trailing-axis work view.
 
@@ -249,7 +380,7 @@ def _execute(
     ef = m + work
 
     if comp.exact:
-        ghat, own = _execute_exact(ef, t, comp, backend)
+        ghat, own, vals, idx = _execute_exact(ef, t, comp, backend)
         new_m = lowpass_update(m, work, own, beta)
     else:
         idx = select_indices(ef, t, comp, backend)  # shared, or per-worker
@@ -268,6 +399,10 @@ def _execute(
     new_enc = codec.encode(
         new_m.reshape((G,) + plan.storage), plan.storage, key=enc_key
     )
+    if taps.active():
+        _tap_execute(
+            plan, codec, ef, vals, idx, ghat, new_m, new_enc, t, metrics_every
+        )
     ef_mean = (
         jnp.mean(ef, axis=0).reshape(plan.shape) if compute_stats else None
     )
@@ -300,7 +435,33 @@ def scalecom_reduce(
               (tests/test_overlap.py).
     Returns (ghat, new_state, stats) where ghat matches the *un-stacked* param
     shapes and is identical on every worker (it came out of an all-reduce).
+
+    With cfg.telemetry the repro.obs taps fired during the reduce come back
+    as extra ``"obs/<name>{labels}"`` float32 leaves of ``stats`` — ordinary
+    jit outputs, so ghat/new_state stay bitwise identical to telemetry=False
+    and the trace is retrace-deterministic (keys are sorted; labels are
+    static plan metadata). The train step forwards stats into its metrics
+    dict, which is where TelemetryRun.record_step picks them up.
     """
+    if not cfg.telemetry:
+        return _reduce(grads_pw, state, cfg, compute_stats, buckets)
+    with taps.collect() as collected:
+        ghat_tree, new_state, stats = _reduce(
+            grads_pw, state, cfg, compute_stats, buckets
+        )
+    for key in sorted(collected):
+        stats[f"obs/{key}"] = collected[key]
+    return ghat_tree, new_state, stats
+
+
+def _reduce(
+    grads_pw: Pytree,
+    state: ScaleComState,
+    cfg: ScaleComConfig,
+    compute_stats: bool,
+    buckets: Any,
+) -> Tuple[Pytree, ScaleComState, Dict[str, Array]]:
+    """The reduce body (scalecom_reduce minus the telemetry collector)."""
     codec = CODECS[cfg.residue_dtype]
     backend = _resolve_cfg_backend(cfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads_pw)
@@ -329,13 +490,23 @@ def scalecom_reduce(
         if plan.dense:
             ghat = jnp.mean(gw, axis=0).reshape(plan.shape)
             return ghat.astype(g.dtype), None, None
+        # the telemetry taps also want the ef-mean pass (per-tensor gamma);
+        # with both off it is never staged
+        want_ef = compute_stats or taps.active()
         ghat, new_enc, ef_mean = _execute(
             plan, gw, state.residues[plan.path], codec, cfg.beta, t,
-            codec_key(plan.path, t), backend, compute_stats,
+            codec_key(plan.path, t), backend, want_ef, cfg.metrics_every,
         )
         sums = None
-        if compute_stats:
-            sums = (jnp.sum((ef_mean - ghat) ** 2), jnp.sum(ef_mean**2))
+        if want_ef:
+            sq = (jnp.sum((ef_mean - ghat) ** 2), jnp.sum(ef_mean**2))
+            taps.tap(
+                "contraction_gamma",
+                sq[0] / jnp.maximum(sq[1], 1e-30),
+                path=plan.path,
+            )
+            if compute_stats:
+                sums = sq
         return ghat.astype(g.dtype), new_enc, sums
 
     schedule = overlap.resolve_buckets(buckets, cfg, plans)
@@ -351,7 +522,18 @@ def scalecom_reduce(
         token = overlap.init_token()
         for b in schedule:
             leaves, token = overlap.stage_bucket(
-                [flat[i][1] for i in b.leaf_ids], token, overlap=cfg.overlap
+                [flat[i][1] for i in b.leaf_ids], token,
+                overlap=cfg.overlap, bucket=b.index,
+            )
+            taps.tap(
+                "bucket_bytes_dense",
+                jnp.asarray(b.bytes_dense, jnp.float32),
+                bucket=b.index,
+            )
+            taps.tap(
+                "bucket_bytes_payload",
+                jnp.asarray(b.bytes_payload, jnp.float32),
+                bucket=b.index,
             )
             outs = [_run_leaf(i, g) for i, g in zip(b.leaf_ids, leaves)]
             for i, out in zip(b.leaf_ids, outs):

@@ -6,7 +6,11 @@ allows it, plus the build-up sweep (local_topk O(n) vs clt_k flat, measured
 against ``analysis.perfmodel.buildup_ratio_model``). Results — per-step
 records, re-plan events, violations — land in ``BENCH_scenarios.json``
 (override with ``--out`` or the ``SCENARIOS_JSON`` env var) and any invariant
-violation makes the exit status non-zero.
+violation makes the exit status non-zero. ``--events-out PATH`` additionally
+emits the run as a structured JSONL event stream (repro.obs.events: one
+``scenario`` event per run, one ``violation`` event per invariant breach,
+provenance header first) — the same format ``python -m repro.obs.report``
+summarizes and CI uploads as an artifact.
 
 Examples::
 
@@ -26,17 +30,6 @@ from typing import List, Optional
 __all__ = ["main", "run_cli"]
 
 DEFAULT_OUT = "BENCH_scenarios.json"
-
-
-def _provenance() -> dict:
-    import jax
-
-    dev = jax.devices()[0]
-    return {
-        "device_kind": dev.device_kind,
-        "jax_backend": jax.default_backend(),
-        "jax_version": jax.__version__,
-    }
 
 
 def _topologies(workers: int, hierarchical: bool) -> List[Optional[int]]:
@@ -95,6 +88,13 @@ def build_parser() -> argparse.ArgumentParser:
         default=None,
         help=f"result JSON path (default {DEFAULT_OUT}; env SCENARIOS_JSON)",
     )
+    p.add_argument(
+        "--events-out",
+        default=None,
+        metavar="PATH",
+        help="also emit the run as a structured JSONL event stream "
+        "(repro.obs.events; summarize with python -m repro.obs.report)",
+    )
     p.add_argument("--list", action="store_true", help="list scenarios and exit")
     p.add_argument("-q", "--quiet", action="store_true")
     return p
@@ -104,6 +104,7 @@ def run_cli(argv: Optional[List[str]] = None) -> int:
     args = build_parser().parse_args(argv)
 
     from repro.harness.scenarios import SCENARIOS, run_buildup_sweep, run_scenario
+    from repro.obs.provenance import provenance
 
     if args.list:
         for spec in SCENARIOS.values():
@@ -126,6 +127,13 @@ def run_cli(argv: Optional[List[str]] = None) -> int:
     workers_list = [int(w) for w in args.workers.split(",") if w.strip()]
 
     say = (lambda *a, **k: None) if args.quiet else print
+    prov = provenance()
+    events = None
+    if args.events_out:
+        from repro.obs.events import EventLog
+
+        events = EventLog(args.events_out)
+        events.emit("provenance", **prov)
     results = []
     all_violations: List[str] = []
     for workers in workers_list:
@@ -155,6 +163,26 @@ def run_cli(argv: Optional[List[str]] = None) -> int:
                 all_violations.extend(
                     f"{name}@n={workers}/{topo}: {v}" for v in res.violations
                 )
+                if events is not None:
+                    events.emit(
+                        "scenario",
+                        name=name,
+                        workers=workers,
+                        topology=topo,
+                        passed=res.passed,
+                        final_distance=res.final_distance,
+                        tolerance=res.tolerance,
+                        mean_buildup=res.mean_buildup,
+                        replans=len(res.replans),
+                    )
+                    for v in res.violations:
+                        events.emit(
+                            "violation",
+                            message=v,
+                            scenario=name,
+                            workers=workers,
+                            topology=topo,
+                        )
 
     buildup = None
     if not args.no_buildup:
@@ -168,10 +196,13 @@ def run_cli(argv: Optional[List[str]] = None) -> int:
                 f"(model {row['local_topk_model']:.3f})"
             )
         all_violations.extend(buildup["violations"])
+        if events is not None:
+            for v in buildup["violations"]:
+                events.emit("violation", message=v, scenario="buildup")
 
     out_path = args.out or os.environ.get("SCENARIOS_JSON") or DEFAULT_OUT
     payload = {
-        "provenance": _provenance(),
+        "provenance": prov,
         "config": {
             "scenarios": names,
             "workers": workers_list,
@@ -190,6 +221,15 @@ def run_cli(argv: Optional[List[str]] = None) -> int:
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
+    if events is not None:
+        events.emit(
+            "summary",
+            runs=len(results),
+            violations=len(all_violations),
+            passed=not all_violations,
+        )
+        events.close()
+        say(f"events -> {args.events_out}")
     say(
         f"{len(results)} runs, {len(all_violations)} violation(s) -> {out_path}"
     )

@@ -18,6 +18,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.compat import jax_compat
 from repro.configs import registry
 from repro.core.compressors import CompressorConfig
@@ -69,11 +70,27 @@ def main(argv=None):
                          "groups / residue dtype: comma-separated scenario "
                          "names or 'all'. Any invariant violation — or a "
                          "topology the planner rejects — aborts the launch")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="enable the telemetry subsystem (repro.obs): jit-safe "
+                         "metric taps on the reduce (measured wire bytes, "
+                         "build-up, contraction gamma, codec error), wall-"
+                         "clock step spans, and write DIR/trace.json (Chrome "
+                         "trace, Perfetto-loadable) + DIR/events.jsonl "
+                         "(summarize with `python -m repro.obs.report`)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="with --trace-dir: sample the paper's residue-"
+                         "similarity diagnostics (core.metrics."
+                         "residue_similarity_report) every N steps via a "
+                         "lax.cond tap — no retrace. 0 disables")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--history-out", default=None)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.metrics_every and not args.trace_dir:
+        ap.error("--metrics-every requires --trace-dir (the similarity taps "
+                 "need the telemetry run to land anywhere)")
 
     cfg = registry.smoke(args.arch) if args.arch in registry._MODULES else None
     if cfg is None:
@@ -128,6 +145,8 @@ def main(argv=None):
         warmup_steps=args.warmup_steps,
         bucket_bytes=bucket_bytes,
         overlap=not args.no_overlap,
+        telemetry=args.trace_dir is not None,
+        metrics_every=args.metrics_every,
     )
     opt = make_optimizer(args.optimizer)
     sched = schedule.linear_warmup(schedule.constant(args.lr), args.warmup_steps)
@@ -159,7 +178,27 @@ def main(argv=None):
         d_model=cfg.d_model,
         encoder_seq=cfg.encoder_seq if cfg.is_encdec else 0,
     )
-    state, history = run_training(loop, state, batches, args.steps)
+    telemetry = None
+    if args.trace_dir:
+        telemetry = obs.TelemetryRun(
+            args.trace_dir,
+            backend_name=args.backend,
+            extra_provenance={"arch": args.arch, "compressor": args.compressor,
+                              "workers": args.workers},
+        )
+    # run_training's default log is the (silent-by-default) telemetry logger;
+    # the CLI is the consumer that wants visible step lines
+    obs.enable_console_logging()
+    try:
+        state, history = run_training(
+            loop, state, batches, args.steps, telemetry=telemetry
+        )
+    finally:
+        if telemetry is not None:
+            paths = telemetry.close()
+            print(f"[launch.train] trace -> {paths['trace']}")
+            print(f"[launch.train] events -> {paths['events']} "
+                  f"(summarize: python -m repro.obs.report {paths['events']})")
     final = history[-1]
     print(f"final: loss={final['loss']:.4f} at step {final['step']}")
     if args.history_out:

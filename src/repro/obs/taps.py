@@ -1,0 +1,112 @@
+"""Jit-safe metric taps — the ONE way telemetry gets values off the hot path.
+
+The reduce (``core.scalecom``) and the bucket scheduler (``core.overlap``)
+run inside ``jax.jit``: a host callback (``jax.debug.callback`` /
+``io_callback``) or a wall-clock timer there would either break tracing or
+silently serialize the device stream — exactly the overhead Agarwal et al.
+2021 show erases compression's modeled gains. Taps avoid both by being a
+*trace-time* mechanism:
+
+  * ``tap(name, value, **labels)`` records ``value`` (usually a traced
+    array) into the innermost active collector. With no collector active it
+    is a no-op costing one attribute load and a truthiness check at TRACE
+    time — nothing is staged into the compiled program, so telemetry-off
+    runs are byte-identical to a build without telemetry at all.
+  * ``collect()`` pushes a collector; the caller that opened it (the
+    telemetry-aware entry point, e.g. ``scalecom_reduce`` with
+    ``cfg.telemetry``) merges the collected values into its *returned* aux
+    pytree. The tracer values ride out of the jitted function as ordinary
+    outputs — no side channel, no host sync, bitwise-identical primary
+    outputs, and retrace-deterministic (collection order is Python call
+    order, which is fixed for a fixed trace).
+
+Keys are ``name{label=value,...}`` with labels sorted by label name, so the
+same tap site always produces the same key — the retrace-determinism
+contract — and the host side (``repro.obs.registry``) can parse the labels
+back out. Conventional labels: ``path`` (tensor), ``bucket`` (launch bucket
+id), ``compressor``, ``layout``, ``backend``.
+
+This module is dependency-free on purpose: ``repro.core`` imports it, so it
+must not import anything from ``repro`` (or jax).
+
+The scalecheck rule ``obs-hot-path`` enforces the flip side: no host
+callbacks, prints, or obs *timer* calls (``repro.obs.tracing`` spans) inside
+functions reachable from ``scalecom_reduce`` — taps are the only sanctioned
+telemetry primitive there.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Iterator, List, Tuple
+
+__all__ = ["active", "tap", "tap_key", "parse_key", "collect"]
+
+# Innermost-last stack of active collectors. Taps are a trace-time mechanism,
+# so "global mutable state" here is the same kind of state as jax's own trace
+# stack: scoped strictly by the ``collect()`` context manager.
+_STACK: List[Dict[str, Any]] = []
+
+
+def active() -> bool:
+    """True iff some caller up-stack is collecting taps.
+
+    Hot-path code gates *extra aux computation* (e.g. an ef-mean pass that
+    only feeds a diagnostic) on this, so telemetry-off traces never stage it.
+    """
+    return bool(_STACK)
+
+
+def tap_key(name: str, **labels: Any) -> str:
+    """The stable collector key for one tap site: ``name{k=v,...}``, labels
+    sorted by label name (deterministic across retraces)."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+def parse_key(key: str) -> Tuple[str, Dict[str, str]]:
+    """Invert ``tap_key``: ``"a{x=1,y=2}"`` -> ``("a", {"x": "1", "y": "2"})``.
+
+    Label values are returned as strings (labels are static metadata, not
+    measurements). Tensor paths may themselves contain ``,`` or ``=`` only in
+    pathological cases; pytree keystrs (``['w']``) do not.
+    """
+    if not key.endswith("}") or "{" not in key:
+        return key, {}
+    name, _, rest = key.partition("{")
+    labels: Dict[str, str] = {}
+    for part in rest[:-1].split(","):
+        if "=" in part:
+            k, _, v = part.partition("=")
+            labels[k] = v
+    return name, labels
+
+
+def tap(name: str, value: Any, **labels: Any) -> None:
+    """Record ``value`` under ``tap_key(name, **labels)`` in the innermost
+    collector; no-op when none is active (the zero-overhead-when-disabled
+    guarantee). A repeated key within one collection overwrites — tap sites
+    that fire per tensor/bucket must carry a distinguishing label."""
+    if not _STACK:
+        return
+    _STACK[-1][tap_key(name, **labels)] = value
+
+
+@contextlib.contextmanager
+def collect() -> Iterator[Dict[str, Any]]:
+    """Collect every ``tap`` fired in the dynamic extent of the block.
+
+    Yields the (initially empty) dict the taps land in; the caller is
+    responsible for threading the collected values out of any surrounding
+    ``jit`` as ordinary outputs (see ``core.scalecom.scalecom_reduce``).
+    Collectors nest: an inner ``collect`` shadows the outer one, so a nested
+    telemetry-enabled reduce does not leak its taps into the caller's set.
+    """
+    collected: Dict[str, Any] = {}
+    _STACK.append(collected)
+    try:
+        yield collected
+    finally:
+        _STACK.pop()

@@ -4,6 +4,14 @@ periodic checkpointing, and optional residue-similarity probes.
 The warm-up uses a *separately compiled* dense step (the paper trains 1-5 epochs
 uncompressed before enabling compression); ScaleCom residues are zero during
 warm-up so switching steps is state-compatible by construction.
+
+Logging routes through the ``repro`` telemetry logger (repro.obs.get_logger)
+by default — silent unless a consumer attaches a handler
+(obs.enable_console_logging, which the launch CLI does), so benches and the
+harness importing this loop stay quiet. Pass ``log=print`` for the old
+behaviour, or ``log=None`` alongside ``telemetry=`` a TelemetryRun to get
+step spans + per-step metric events (including the ``obs/`` tap leaves the
+reduce emits under ``ScaleComConfig.telemetry``) without console noise.
 """
 
 from __future__ import annotations
@@ -15,10 +23,15 @@ from typing import Any, Callable, Dict, Iterator, List, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.scalecom import ScaleComConfig
 from repro.training.train_step import TrainState, build_train_step
 
 __all__ = ["TrainLoop", "run_training"]
+
+# default-log sentinel: distinguishes "not passed" (route to the telemetry
+# logger) from an explicit log=None (fully silent, the historical opt-out)
+_LOGGER = object()
 
 
 @dataclasses.dataclass
@@ -72,14 +85,34 @@ def run_training(
     batches: Iterator[Dict[str, np.ndarray]],
     num_steps: int,
     *,
-    log: Optional[Callable[[str], None]] = print,
+    log: Any = _LOGGER,
+    telemetry: Optional["obs.TelemetryRun"] = None,
 ) -> tuple[TrainState, List[Dict[str, float]]]:
+    """Drive ``num_steps`` through the loop's compiled steps.
+
+    log:       a ``str -> None`` callable for the per-interval step line.
+               Default: the ``repro.training`` telemetry logger — a no-op
+               unless a handler is attached (obs.enable_console_logging), so
+               library consumers are quiet by default. ``None`` silences
+               entirely; ``print`` restores the historical console output.
+    telemetry: an ``obs.TelemetryRun``: every step gets a wall-clock span and
+               a ``step`` event carrying the full metrics dict (converting
+               the metrics is a per-step device sync — the honest cost of
+               per-step observability). The caller closes the run.
+    """
+    if log is _LOGGER:
+        log = obs.get_logger("training").info
     history: List[Dict[str, float]] = []
     t0 = time.time()
     for i, batch in enumerate(batches):
         if i >= num_steps:
             break
-        state, metrics = loop.step(state, batch, i)
+        if telemetry is not None:
+            with telemetry.step_span(i):
+                state, metrics = loop.step(state, batch, i)
+                telemetry.record_step(i, {k: float(v) for k, v in metrics.items()})
+        else:
+            state, metrics = loop.step(state, batch, i)
         if (i % loop.log_every == 0) or i == num_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = i

@@ -1,0 +1,32 @@
+"""Seeded violation for the ``obs-hot-path`` rule (never imported)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def scalecom_reduce(grads, state, cfg):
+    t0 = time.perf_counter()  # wall clock inside the traced reduce
+    print("reducing", grads)  # host callback on the hot path
+    out = _compress(grads)
+    jax.debug.print("ghat {x}", x=out)  # jax-flavoured host callback
+    return out, time.perf_counter() - t0
+
+
+def _compress(g):
+    # reachable from scalecom_reduce through the call above
+    tracer = _get_tracer()
+    with tracer.span("compress"):  # obs timer span inside the trace
+        return jnp.sign(g)
+
+
+def _get_tracer():
+    return None
+
+
+def unrelated(g):
+    # NOT reachable from the reduce path: none of these may fire
+    print("fine here")
+    time.perf_counter()
+    return g

@@ -101,6 +101,18 @@ def test_tracer_hygiene_fixture():
     assert "bool()" in msgs and "'helper'" in msgs
 
 
+def test_obs_hot_path_fixture():
+    findings = _run(FIXTURES / "obs_hotpath_violation.py", "obs-hot-path")
+    msgs = "\n".join(f.message for f in findings)
+    assert "print(...)" in msgs  # bare host print
+    assert "jax.debug.print(...)" in msgs  # jax host callback
+    assert "time.perf_counter(...)" in msgs  # wall clock in the trace
+    # the obs timer span fires in the TRANSITIVELY reached helper
+    assert ".span(...)" in msgs and "'_compress'" in msgs
+    # nothing fires in the unreachable function
+    assert "'unrelated'" not in msgs
+
+
 def test_payload_coverage_fixture():
     findings = _run(FIXTURES / "payload_violation", "payload-coverage")
     msgs = sorted(f.message for f in findings)
@@ -158,7 +170,8 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for name in (
         "compat-boundary", "env-at-import", "no-rw-surface",
-        "tracer-hygiene", "payload-coverage", "collective-schedule",
+        "tracer-hygiene", "payload-coverage", "obs-hot-path",
+        "collective-schedule",
     ):
         assert name in out
 
