@@ -14,6 +14,13 @@ step vs ~3 for the fused kernel (the quantity that matters at P = trillions
 of residues). Tile geometry per (op, chunk, dtype) is whatever the
 repro.backends.autotune cache holds for this device — run autotune first to
 sweep BLOCK_CHUNKS.
+
+The fused-vs-3-launch rows compare the single-launch ``fused_reduce`` op
+against the composed select → ef_update → scatter chain on a worker-stacked
+input: per path they carry the MEASURED launch count (jaxpr-derived —
+repro.backends.introspect, immune to jit caching) and the MODELED per-phase
+HBM bytes (analysis.perfmodel.fused_hbm_report; interpret-mode wall time is
+an overhead check only, per the ROADMAP bench convention).
 """
 
 from __future__ import annotations
@@ -74,6 +81,45 @@ def _bench_backend(be, size: int) -> list[dict]:
 ROWWISE_SHAPE = (4, 64, 4096)  # (workers, rows, C); C % CHUNK == 0
 TOPMS = (1, 2, 4)
 
+# fused-vs-3-launch sweep: per-worker sizes chosen so the total
+# worker-stacked workload matches the 1-D SIZES rows above.
+FUSED_WORKERS = 4
+FUSED_SIZES = (1 << 14, 1 << 18)
+
+
+def _bench_fused(be, size: int) -> list[dict]:
+    """The fused single-launch reduce vs the composed 3-launch chain."""
+    from repro.analysis.perfmodel import fused_hbm_report
+    from repro.backends.base import KernelBackend
+    from repro.backends.introspect import count_pallas_launches
+
+    G = FUSED_WORKERS
+    m = jax.random.normal(jax.random.PRNGKey(4), (G, size))
+    g = jax.random.normal(jax.random.PRNGKey(5), (G, size))
+    leader = jnp.zeros((), jnp.int32)
+    model = fused_hbm_report(size, workers=G, chunk=CHUNK)
+    paths = (
+        ("fused_reduce", "fused",
+         lambda mm, gg, ll: be.fused_reduce(mm, gg, 0.1, CHUNK, 1, "clt_k", ll)),
+        # the unfused baseline: the SAME contract composed from the three
+        # primitive launches (backends.base default), on the same backend
+        ("fused_reduce_composed", "unfused",
+         lambda mm, gg, ll: KernelBackend.fused_reduce(
+             be, mm, gg, 0.1, CHUNK, 1, "clt_k", ll)),
+    )
+    out = []
+    for op, which, fn in paths:
+        us = time_fn(jax.jit(fn), m, g, leader)
+        out.append({
+            "op": op, "backend": be.name, "size": size, "chunk": CHUNK,
+            "workers": G, "us_per_call": us, "elems_per_us": m.size / us,
+            "launches": count_pallas_launches(fn, m, g, leader),
+            "hbm_passes_model": model[which]["passes"],
+            "hbm_bytes_model": model[which]["bytes"],
+            "hbm_bytes_phases_model": model[which]["phases"],
+        })
+    return out
+
 
 def _bench_rowwise_topm(be) -> list[dict]:
     g = jax.random.normal(jax.random.PRNGKey(2), ROWWISE_SHAPE)
@@ -127,6 +173,19 @@ def run() -> list[Row]:
                     f"elems_per_us={e['elems_per_us']:.0f};rate={CHUNK // e['topm']}x",
                 )
             )
+        for size in FUSED_SIZES:
+            for e in _bench_fused(be, size):
+                e.update(tags)
+                entries.append(e)
+                rows.append(
+                    (
+                        f"kernels/{e['op']}_{name}_n{size}",
+                        e["us_per_call"],
+                        f"launches={e['launches']};"
+                        f"hbm_passes_model={e['hbm_passes_model']:.2f};"
+                        f"hbm_bytes_model={e['hbm_bytes_model']:.3g}",
+                    )
+                )
 
     # cross-backend correctness probe on a tail-chunk size (the CI canary)
     ok = None

@@ -19,6 +19,13 @@ bytes, build-up, contraction gamma) + wall-clock spans:
     PYTHONPATH=src python -m repro.obs.report /tmp/trace/events.jsonl
 
 then load /tmp/trace/trace.json in chrome://tracing or Perfetto.
+
+On TPU-class backends the whole per-tensor inner loop (select -> EF update
+-> ghat scatter) can run as ONE VMEM-resident Pallas launch instead of
+three: set ``ScaleComConfig(fused=True)`` (or ``SCALECOM_FUSED=1`` with the
+default ``fused="auto"``) — bitwise-identical results, ~7 -> ~3 modeled HBM
+passes over the residue; see ROADMAP.md "Backend surface" and
+``benchmarks/bench_kernels.py`` for the fused-vs-3-launch numbers.
 """
 
 import sys

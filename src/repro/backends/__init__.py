@@ -12,11 +12,13 @@ the CI leg that runs the whole tier-1 suite through pallas-interpret).
 """
 
 from repro.backends.base import (
+    FUSABLE_MODES,
     KernelBackend,
     available_backends,
     pallas_available,
     register_backend,
     resolve_backend,
+    resolve_fused,
 )
 
 # Importing the implementation modules registers them.
@@ -24,9 +26,11 @@ from repro.backends import jnp_backend as _jnp_backend  # noqa: F401
 from repro.backends import pallas_backend as _pallas_backend  # noqa: F401
 
 __all__ = [
+    "FUSABLE_MODES",
     "KernelBackend",
     "available_backends",
     "pallas_available",
     "register_backend",
     "resolve_backend",
+    "resolve_fused",
 ]

@@ -46,7 +46,14 @@ __all__ = [
 # kernel default (chunk_topk.BLOCK_CHUNKS) is included by construction.
 CANDIDATE_BLOCKS: Tuple[int, ...] = (64, 128, 256, 512, 1024)
 
-_OPS = ("select", "ef_update")
+_OPS = ("select", "ef_update", "fused_reduce")
+
+# Tile-geometry fallback chain: an op with no cache entry of its own borrows
+# the tuned tile of the op it most resembles before giving up to the kernel
+# default. fused_reduce streams the same (block_chunks, chunk) data tiles as
+# ef_update (just with the worker axis resident), so an ef_update sweep is a
+# far better prior than the untuned default.
+_TILE_FALLBACK = {"fused_reduce": "ef_update"}
 
 _cache: Optional[Dict[str, int]] = None  # in-process mirror of the file
 
@@ -121,11 +128,20 @@ def best_block_chunks(op: str, n_chunks: int, chunk: int, dtype) -> int:
     """Cached tile height for ``op``, or the kernel default on a miss.
 
     Cheap enough for the per-launch dispatch path: one dict lookup after the
-    first call. Never times anything — run ``autotune`` to populate.
+    first call (two on a fallback-chain hop — see ``_TILE_FALLBACK``; e.g.
+    "fused_reduce" with no entry of its own borrows "ef_update"'s tuned
+    tile). Never times anything — run ``autotune`` to populate. Unknown op
+    names raise: a typo here would otherwise silently pin the default tile
+    forever, which is exactly the failure mode the cache exists to avoid.
     """
     from repro.kernels.chunk_topk import BLOCK_CHUNKS
 
-    got = _load().get(_key(op, chunk, dtype, n_chunks))
+    if op not in _OPS:
+        raise ValueError(f"unknown autotune op {op!r}; known ops: {_OPS}")
+    cache = _load()
+    got = cache.get(_key(op, chunk, dtype, n_chunks))
+    if got is None and op in _TILE_FALLBACK:
+        got = cache.get(_key(_TILE_FALLBACK[op], chunk, dtype, n_chunks))
     if got is None:
         return BLOCK_CHUNKS
     # Guard against stale caches written with a candidate set we no longer
@@ -156,22 +172,37 @@ def autotune(
 ) -> int:
     """Sweep ``candidates`` for ``op`` at (size, chunk, dtype); cache winner.
 
-    op: "select" (chunk_argmax) or "ef_update" (fused residue update).
+    op: "select" (chunk_argmax), "ef_update" (fused residue update), or
+    "fused_reduce" (the single-launch select→EF→scatter kernel; swept on a
+    4-worker stack, clt_k mode, and keyed by the TOTAL launch rows —
+    workers × chunk rows — matching PallasBackend._block's convention).
     Returns the winning block_chunks (also written to the on-disk cache under
     the current device kind).
     """
     if op not in _OPS:
         raise ValueError(f"op must be one of {_OPS}, got {op!r}")
-    from repro.kernels import chunk_topk, ef_update
+    from repro.kernels import chunk_topk, ef_update, fused_reduce
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_chunks = -(-size // chunk)
     key = jax.random.PRNGKey(seed)
-    x = jax.random.normal(key, (size,)).astype(dtype)
-    if op == "ef_update":
-        g = jax.random.normal(jax.random.fold_in(key, 1), (size,)).astype(dtype)
-        idx = jnp.zeros((n_chunks,), jnp.int32)
+    key_rows = n_chunks
+    if op == "fused_reduce":
+        workers = 4
+        key_rows = workers * n_chunks
+        mw = jax.random.normal(key, (workers, n_chunks * chunk)).astype(dtype)
+        gw = jax.random.normal(
+            jax.random.fold_in(key, 1), (workers, n_chunks * chunk)
+        ).astype(dtype)
+        leader = jnp.zeros((), jnp.int32)
+    else:
+        x = jax.random.normal(key, (size,)).astype(dtype)
+        if op == "ef_update":
+            g = jax.random.normal(
+                jax.random.fold_in(key, 1), (size,)
+            ).astype(dtype)
+            idx = jnp.zeros((n_chunks,), jnp.int32)
 
     best_block, best_t = None, float("inf")
     for block in candidates:
@@ -180,6 +211,12 @@ def autotune(
                 a, chunk, interpret=interpret, block_chunks=block
             )
             t = _time_once(fn, x, iters=iters)
+        elif op == "fused_reduce":
+            fn = lambda mm, gg, ll: fused_reduce.fused_reduce_trailing(  # noqa: E731
+                mm, gg, ll, 0.1, chunk, 1, "clt_k",
+                interpret=interpret, block_chunks=block,
+            )
+            t = _time_once(fn, mw, gw, leader, iters=iters)
         else:
             fn = lambda mm, gg, ii: ef_update.ef_update_pallas(  # noqa: E731
                 mm, gg, ii, 0.1, chunk, interpret=interpret, block_chunks=block
@@ -187,7 +224,7 @@ def autotune(
             t = _time_once(fn, x, g, idx, iters=iters)
         if t < best_t:
             best_block, best_t = block, t
-    _store(_key(op, chunk, dtype, n_chunks), best_block)
+    _store(_key(op, chunk, dtype, key_rows), best_block)
     return best_block
 
 

@@ -34,8 +34,31 @@ Derived ops that backends override for fusion:
                                              residue update (ef=m+g, gather,
                                              scatter, axpy in one read/write
                                              per tile)
+  fused_reduce(m, g, beta, chunk, topm,
+               mode, leader)              -> (idx, vals, m', ghat): the whole
+                                             per-tensor inner loop — select
+                                             over worker-stacked EF, residue
+                                             update, ĝ scatter. The default
+                                             here composes the three
+                                             primitives (3 launches on a
+                                             kernel backend); PallasBackend
+                                             overrides it with the
+                                             single-launch VMEM-resident
+                                             kernel (kernels.fused_reduce).
+                                             Only shared-index compressors
+                                             are fusable (mode "clt_k" /
+                                             "true_topk"); the reduce falls
+                                             back to the unfused path for
+                                             the rest (local_topk, random_k,
+                                             exact).
 
 so a minimal backend is exactly {select_indices, gather, scatter}.
+
+Whether the reduce *calls* fused_reduce is a separate, orthogonal resolution:
+``resolve_fused(spec)`` with spec True/False/"auto" ("auto" = the
+SCALECOM_FUSED env var at call time, default off until the on-TPU sweep
+lands — see ROADMAP). Explicit config wins over env, mirroring
+layout/backend resolution.
 
 Resolution
 ----------
@@ -69,11 +92,18 @@ Array = jnp.ndarray
 
 __all__ = [
     "KernelBackend",
+    "FUSABLE_MODES",
     "register_backend",
     "available_backends",
     "resolve_backend",
+    "resolve_fused",
     "pallas_available",
 ]
+
+# Selection modes fused_reduce implements — the shared-index compressors.
+# Must agree with kernels.fused_reduce.FUSABLE_MODES (kept separate so this
+# module never imports the pallas package).
+FUSABLE_MODES = ("clt_k", "true_topk")
 
 
 class KernelBackend:
@@ -137,6 +167,51 @@ class KernelBackend:
         own = self.scatter(vals, idx, chunk, m.shape[-1], topm)
         return m + beta * (g - own), vals
 
+    def fused_reduce(
+        self,
+        m: Array,
+        g: Array,
+        beta: float,
+        chunk: int,
+        topm: int = 1,
+        mode: str = "clt_k",
+        leader: Union[Array, None] = None,
+    ) -> Tuple[Array, Array, Array, Array]:
+        """The whole per-tensor inner loop: select → EF update → ĝ scatter.
+
+        m, g: worker-stacked (n_workers, ..., size). mode is the shared-index
+        selection rule ("clt_k" needs ``leader``, the traced int32 leader
+        rank t mod n; "true_topk" selects over the worker mean and ignores
+        it). Returns (idx, vals, m_new, ghat):
+
+          idx    (..., n_chunks[, topm])             shared index set
+          vals   (n_workers, ..., n_chunks[, topm])  per-worker EF values
+          m_new  m.shape                             Eq. 5 residue update
+          ghat   (..., size)                         scatter of mean(vals)
+
+        This default composes the three primitives — the exact op sequence
+        ``core.scalecom._execute`` runs on the unfused path, so any backend
+        implementing the minimal surface gets fused_reduce for free (3
+        launches on a kernel backend). PallasBackend overrides it with the
+        single-launch VMEM-resident kernel.
+        """
+        if mode not in FUSABLE_MODES:
+            raise ValueError(
+                f"fused_reduce supports modes {FUSABLE_MODES}, got {mode!r}"
+            )
+        ef = m + g
+        if mode == "clt_k":
+            from repro.core.compressors import leader_pick
+
+            idx = leader_pick(self.select_indices(ef, chunk, topm), leader)
+        else:
+            idx = self.select_indices(jnp.mean(ef, axis=0), chunk, topm)
+        m_new, vals = self.ef_update(m, g, idx, beta, chunk, topm)
+        ghat = self.scatter(
+            jnp.mean(vals, axis=0), idx, chunk, m.shape[-1], topm
+        )
+        return idx, vals, m_new, ghat
+
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         return f"<KernelBackend {self.name}>"
 
@@ -197,3 +272,40 @@ def resolve_backend(
             f"{sorted(_REGISTRY)} (register_backend to add one)"
         ) from None
     return factory()
+
+
+_FUSED_ENV = "SCALECOM_FUSED"
+_FUSED_TRUE = ("1", "true", "on", "yes")
+_FUSED_FALSE = ("0", "false", "off", "no")
+
+
+def resolve_fused(spec: Union[bool, str, None] = "auto") -> bool:
+    """Resolve the fused-reduce decision (True | False | "auto").
+
+    Explicit booleans win unconditionally ("explicit beats env", same
+    contract as layout/backend resolution). "auto"/None reads the
+    SCALECOM_FUSED env var at CALL time (so tests and hot-swapping
+    deployments see updates): accepted truthy values {1, true, on, yes},
+    falsy {0, false, off, no} (case-insensitive); unset/empty means False —
+    the fused kernel stays opt-in until the on-TPU autotune sweep validates
+    native lowering (ROADMAP follow-up). Anything else raises naming the
+    valid set.
+    """
+    if isinstance(spec, bool):
+        return spec
+    if spec in (None, "auto"):
+        env = os.environ.get(_FUSED_ENV, "").strip().lower()
+        if not env:
+            return False
+        if env in _FUSED_TRUE:
+            return True
+        if env in _FUSED_FALSE:
+            return False
+        raise ValueError(
+            f"invalid {_FUSED_ENV}={env!r}; expected one of "
+            f"{_FUSED_TRUE + _FUSED_FALSE}"
+        )
+    raise ValueError(
+        f"fused must be True, False, or 'auto' "
+        f"(then ${_FUSED_ENV} decides); got {spec!r}"
+    )

@@ -126,6 +126,26 @@ class PallasBackend(KernelBackend):
         )
         return m_new[..., :n], vals
 
+    def fused_reduce(
+        self, m: Array, g: Array, beta: float, chunk: int, topm: int = 1,
+        mode: str = "clt_k", leader=None,
+    ):
+        # ONE launch for the whole inner loop — select over worker-stacked
+        # EF, Eq. 5 residue update, ĝ scatter — with each chunk tile
+        # VMEM-resident across all three phases (kernels.fused_reduce).
+        from repro.kernels import fused_reduce as fr
+
+        n = m.shape[-1]
+        if leader is None:
+            leader = jnp.zeros((), jnp.int32)
+        idx, vals, m_new, ghat = fr.fused_reduce_trailing(
+            _padded(m, chunk), _padded(g, chunk), leader, float(beta),
+            chunk, topm, mode,
+            interpret=self._interp(),
+            block_chunks=self._block("fused_reduce", m, chunk),
+        )
+        return idx, vals, m_new[..., :n], ghat[..., :n]
+
 
 def _padded(x: Array, chunk: int) -> Array:
     """Pad the trailing axis to a chunk multiple (trailing-kernel contract)."""

@@ -68,6 +68,18 @@ instead of the 7-pass jnp chain, in both layouts; on the jnp backend it is
 the bitwise reference chain. Trajectories agree across backends to fp32
 tolerance (tests/test_backends.py).
 
+Fused inner loop (ScaleComConfig.fused): with ``fused=True`` (or "auto" +
+$SCALECOM_FUSED) the whole inner loop collapses into the backend's ONE
+``fused_reduce`` op — on the pallas backend a single launch keeping each
+chunk tile VMEM-resident across select → EF update → ĝ scatter
+(kernels.fused_reduce, ~3 HBM passes instead of ~7 — see
+analysis.perfmodel.reduce_hbm_passes), on the jnp backend the identical
+3-op composition. Only the shared-index compressors are fusable (clt_k,
+true_topk); local_topk / random_k / exact / dense tensors silently take the
+unfused path, so a mixed rate_rules plan works under fused=True. Bitwise
+identical indices and allclose values either way (tests/test_backends.py);
+the 1-launch property is pinned by tests/test_kernels.py.
+
 Hierarchical / grouped mode (DESIGN.md §5): with ``groups=G < n`` the inner
 n/G workers are dense-averaged first (fast intra-group ICI reduce) and CLT-k
 runs across the G groups (the slow inter-group link, e.g. the multi-pod DCN
@@ -84,6 +96,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.backends.base import FUSABLE_MODES, resolve_fused
 from repro.core.compressors import (
     CompressorConfig,
     compress,
@@ -121,6 +134,17 @@ class ScaleComConfig:
                     iff running on TPU, else jnp), "jnp", "pallas", or a
                     KernelBackend instance. Resolved at trace time with
                     call-time feature probes (repro.backends).
+    fused:          run the per-tensor inner loop through the backend's
+                    single ``fused_reduce`` op where the compressor is
+                    fusable (clt_k / true_topk — one kernel launch on the
+                    pallas backend instead of three): True | False | "auto"
+                    (default: the $SCALECOM_FUSED env var at call time,
+                    unset = off — the fused CI leg sets it). Explicit
+                    booleans win over env, mirroring layout/backend.
+                    Non-fusable tensors (local_topk, random_k, exact,
+                    dense) silently keep the unfused path, so mixed
+                    rate_rules plans work under fused=True. Identical
+                    numerics either way.
     groups:         ScaleCom worker granularity; None => every data rank is a
                     worker. G < n enables hierarchical mode.
     warmup_steps:   steps of dense reduction before compression kicks in
@@ -156,6 +180,7 @@ class ScaleComConfig:
     residue_dtype: str = "fp32"
     layout: str = "auto"
     backend: Any = "auto"
+    fused: Any = "auto"
     groups: Optional[int] = None
     warmup_steps: int = 0
     bucket_bytes: int = 25 << 20
@@ -184,6 +209,11 @@ class ScaleComConfig:
             raise ValueError(
                 f"metrics_every must be >= 0 (0 disables similarity "
                 f"sampling), got {self.metrics_every}"
+            )
+        if not (isinstance(self.fused, bool) or self.fused in (None, "auto")):
+            raise ValueError(
+                f"fused must be True, False, or 'auto' (then $SCALECOM_FUSED "
+                f"decides at call time); got {self.fused!r}"
             )
 
     def n_workers(self, data_ranks: int) -> int:
@@ -355,6 +385,7 @@ def _execute(
     backend,
     compute_stats: bool,
     metrics_every: int = 0,
+    fused: bool = False,
 ):
     """Algorithm 1 over the plan's trailing-axis work view.
 
@@ -364,7 +395,10 @@ def _execute(
     reshape ever crosses a sharded axis in the rowwise layout. All chunked
     math goes through the backend's one trailing-axis op set; on the pallas
     backend that is three kernel launches (select, fused Eq. 5 EF update,
-    ĝ scatter).
+    ĝ scatter) — or, with ``fused`` and a fusable compressor, ONE
+    ``fused_reduce`` launch with the chunk tile VMEM-resident across all
+    three phases; on that path ``ef = m + g`` is never materialized unless
+    telemetry/stats ask for it.
 
     Returns (ghat (*plan.shape), new_enc, ef_mean) — ef_mean feeds the
     contraction_gamma diagnostic (identical in both layouts; None unless
@@ -377,11 +411,22 @@ def _execute(
     if plan.work != plan.storage:
         m = m.reshape((G,) + plan.work)  # exact path over a rowwise residue
     C = work.shape[-1]
-    ef = m + work
+    use_fused = fused and not comp.exact and comp.name in FUSABLE_MODES
+    ef = None if use_fused else m + work
 
     if comp.exact:
         ghat, own, vals, idx = _execute_exact(ef, t, comp, backend)
         new_m = lowpass_update(m, work, own, beta)
+    elif use_fused:
+        # Single fused op: select over worker-stacked EF, Eq. 5 residue
+        # update, ĝ scatter — one kernel launch on the pallas backend, the
+        # identical 3-op composition on jnp (backends.base.fused_reduce).
+        leader = (
+            jnp.mod(t, G).astype(jnp.int32) if comp.name == "clt_k" else None
+        )
+        idx, vals, new_m, ghat = backend.fused_reduce(
+            m, work, beta, comp.chunk, comp.topm, comp.name, leader
+        )
     else:
         idx = select_indices(ef, t, comp, backend)  # shared, or per-worker
         # Fused Eq. 5: one pass emits both the residue update and the values
@@ -400,9 +445,30 @@ def _execute(
         new_m.reshape((G,) + plan.storage), plan.storage, key=enc_key
     )
     if taps.active():
+        if ef is None:
+            ef = m + work  # telemetry-only; the fused hot path skips it
+        # Which path this tensor took + the inner-loop launch count a kernel
+        # backend pays for it (static plan facts, so the values are the same
+        # on every retrace; obs.report surfaces them as the fused-path table).
+        taps.tap(
+            "fused",
+            jnp.asarray(1.0 if use_fused else 0.0, jnp.float32),
+            path=plan.path,
+            compressor=comp.name,
+        )
+        taps.tap(
+            "fused_launches",
+            jnp.asarray(
+                0.0 if comp.exact else (1.0 if use_fused else 3.0),
+                jnp.float32,
+            ),
+            path=plan.path,
+        )
         _tap_execute(
             plan, codec, ef, vals, idx, ghat, new_m, new_enc, t, metrics_every
         )
+    if compute_stats and ef is None:
+        ef = m + work
     ef_mean = (
         jnp.mean(ef, axis=0).reshape(plan.shape) if compute_stats else None
     )
@@ -464,6 +530,7 @@ def _reduce(
     """The reduce body (scalecom_reduce minus the telemetry collector)."""
     codec = CODECS[cfg.residue_dtype]
     backend = _resolve_cfg_backend(cfg)
+    fused = resolve_fused(cfg.fused)
     flat, treedef = jax.tree_util.tree_flatten_with_path(grads_pw)
     plans = plan_tensors(
         tuple(
@@ -496,6 +563,7 @@ def _reduce(
         ghat, new_enc, ef_mean = _execute(
             plan, gw, state.residues[plan.path], codec, cfg.beta, t,
             codec_key(plan.path, t), backend, want_ef, cfg.metrics_every,
+            fused,
         )
         sums = None
         if want_ef:

@@ -115,6 +115,29 @@ def summarize(path: str) -> Dict[str, Any]:
     gammas = [
         v for vals in _tap_series(steps, "contraction_gamma").values() for v in vals
     ]
+
+    # --- fused-path taps: which inner-loop path each tensor took and the
+    # per-tensor launch count a kernel backend pays (obs/fused{...} /
+    # obs/fused_launches{...} — static plan facts, so any step is
+    # representative; we read the last one).
+    fused_flags = [
+        v for vals in _tap_series(steps, "fused").values() for v in vals
+    ]
+    launches = [
+        v for vals in _tap_series(steps, "fused_launches").values() for v in vals
+    ]
+    n_steps_fused = len(_tap_series(steps, "fused"))
+    per_step = max(1, n_steps_fused)
+    fused_path = (
+        {
+            "tensors": len(fused_flags) // per_step,
+            "tensors_fused": int(sum(fused_flags) / per_step),
+            "launches_per_step": sum(launches) / per_step,
+        }
+        if fused_flags
+        else None
+    )
+
     return {
         "events": len(events),
         "steps": len(steps),
@@ -128,6 +151,7 @@ def summarize(path: str) -> Dict[str, Any]:
         "buildup_curve": buildup,
         "similarity": similarity,
         "contraction_gamma_mean": _mean(gammas),
+        "fused_path": fused_path,
         "spans": {
             "by_name": by_name,
             "step_total_us": step_us,
@@ -161,6 +185,13 @@ def format_text(s: Dict[str, Any]) -> str:
         )
     if s["contraction_gamma_mean"] is not None:
         lines.append(f"  contraction gamma: mean {s['contraction_gamma_mean']:.4f}")
+    fp = s.get("fused_path")
+    if fp:
+        lines.append(
+            f"  fused path: {fp['tensors_fused']}/{fp['tensors']} compressed "
+            f"tensor(s) on the single-launch fused reduce, "
+            f"{fp['launches_per_step']:.0f} inner-loop kernel launches/step"
+        )
     sim = {k: v for k, v in s["similarity"].items() if v}
     if sim:
         sampled = len(next(iter(sim.values())))

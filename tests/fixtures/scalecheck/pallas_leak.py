@@ -1,0 +1,16 @@
+"""Seeded violation: ``pl.*`` kernel code leaking outside kernels/ (never
+imported). The fused-reduce PR keeps ALL pallas_call sites in kernels/ —
+this fixture proves the ``compat-boundary`` rule would catch one escaping
+into, say, a backend or core module."""
+
+import jax
+from jax.experimental import pallas as pl  # only compat/ and kernels/ may
+
+
+def leaked_kernel(x):
+    def body(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    return pl.pallas_call(
+        body, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype)
+    )(x)

@@ -23,6 +23,7 @@ from repro.backends import (
     KernelBackend,
     available_backends,
     resolve_backend,
+    resolve_fused,
 )
 from repro.backends import autotune
 from repro.backends.jnp_backend import JnpBackend
@@ -140,6 +141,52 @@ def test_use_kernel_deprecation_warns_once_per_process(monkeypatch):
     assert len(dep) == 1
     # the mapping itself still applies on every call, silently
     assert isinstance(comp_mod.resolve_backend_with_deprecation(cfg), PallasBackend)
+
+
+# ---------------------------------------------------------------------------
+# fused-reduce resolution ($SCALECOM_FUSED — mirrors the layout/backend rules)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_fused_env_probe_at_call_time(monkeypatch):
+    monkeypatch.delenv("SCALECOM_FUSED", raising=False)
+    assert resolve_fused("auto") is False  # opt-in until on-TPU validation
+    assert resolve_fused(None) is False
+    for val in ("1", "true", "ON", "yes"):
+        monkeypatch.setenv("SCALECOM_FUSED", val)
+        assert resolve_fused("auto") is True
+    for val in ("0", "false", "Off", "no", ""):
+        monkeypatch.setenv("SCALECOM_FUSED", val)
+        assert resolve_fused("auto") is False
+
+
+def test_resolve_fused_explicit_wins_over_env(monkeypatch):
+    monkeypatch.setenv("SCALECOM_FUSED", "1")
+    assert resolve_fused(False) is False
+    # even a garbage env var is never read when the config is explicit
+    monkeypatch.setenv("SCALECOM_FUSED", "banana")
+    assert resolve_fused(True) is True
+    assert resolve_fused(False) is False
+
+
+def test_resolve_fused_invalid_env_names_valid_set(monkeypatch):
+    monkeypatch.setenv("SCALECOM_FUSED", "maybe")
+    with pytest.raises(ValueError, match="SCALECOM_FUSED") as err:
+        resolve_fused("auto")
+    msg = str(err.value)
+    for token in ("1", "true", "0", "false"):
+        assert token in msg
+
+
+def test_resolve_fused_invalid_spec_raises():
+    # strings other than "auto" are config bugs, not env lookups
+    with pytest.raises(ValueError, match="fused must be"):
+        resolve_fused("yes")
+
+
+def test_config_rejects_invalid_fused_spec():
+    with pytest.raises(ValueError, match="fused must be"):
+        ScaleComConfig(fused="on")
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +314,78 @@ def test_batched_ef_update_parity_shared_idx(topm):
 
 
 # ---------------------------------------------------------------------------
+# fused_reduce parity: single launch ≡ composed 3-op ≡ jnp oracle
+# ---------------------------------------------------------------------------
+
+# worker-stacked geometries: flat (G, size), rowwise with a tail chunk at
+# chunk=16 (45 % 16 != 0), and an aligned rowwise with a non-power-of-2
+# worker count
+_FUSED_SHAPES = [(4, 200), (4, 5, 45), (3, 7, 64)]
+
+
+@pytest.mark.parametrize("mode", ["clt_k", "true_topk"])
+@pytest.mark.parametrize("topm", [1, 2, 4])
+@pytest.mark.parametrize("shape", _FUSED_SHAPES)
+def test_fused_reduce_parity(mode, topm, shape):
+    """pallas fused_reduce (1 launch) vs the base 3-op composition on both
+    backends: bitwise indices, allclose values/residue/ĝ."""
+    chunk = 16
+    m = _rand(shape, 61 + topm)
+    g = _rand(shape, 62 + topm)
+    leader = jnp.asarray(1, jnp.int32)
+    ref = KernelBackend.fused_reduce(JNP, m, g, 0.25, chunk, topm, mode, leader)
+    fused = PAL.fused_reduce(m, g, 0.25, chunk, topm, mode, leader)
+    composed = KernelBackend.fused_reduce(PAL, m, g, 0.25, chunk, topm, mode, leader)
+    np.testing.assert_array_equal(np.asarray(fused[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(composed[0]), np.asarray(ref[0]))
+    for i in (1, 2, 3):  # vals, m_new, ghat
+        np.testing.assert_allclose(
+            np.asarray(fused[i]), np.asarray(ref[i]), rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(composed[i]), np.asarray(ref[i]), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_fused_reduce_parity_bf16_tail_chunk():
+    chunk, shape = 16, (4, 130)  # bf16 + tail chunk
+    m = _rand(shape, 71, jnp.bfloat16)
+    g = _rand(shape, 72, jnp.bfloat16)
+    leader = jnp.asarray(3, jnp.int32)
+    ref = KernelBackend.fused_reduce(JNP, m, g, 0.5, chunk, 2, "clt_k", leader)
+    fused = PAL.fused_reduce(m, g, 0.5, chunk, 2, "clt_k", leader)
+    np.testing.assert_array_equal(np.asarray(fused[0]), np.asarray(ref[0]))
+    for i in (1, 2, 3):
+        np.testing.assert_allclose(
+            np.asarray(fused[i], np.float32),
+            np.asarray(ref[i], np.float32),
+            rtol=2e-2,
+            atol=2e-2,
+        )
+
+
+def test_fused_reduce_leader_matters():
+    """clt_k: the traced leader rank actually picks that worker's indices."""
+    chunk, shape = 16, (4, 96)
+    m, g = _rand(shape, 81), _rand(shape, 82)
+    ef = m + g
+    for rank in range(shape[0]):
+        idx, _, _, _ = PAL.fused_reduce(
+            m, g, 0.25, chunk, 1, "clt_k", jnp.asarray(rank, jnp.int32)
+        )
+        want = JNP.select_indices(ef[rank], chunk, 1)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(want))
+
+
+def test_fused_reduce_rejects_unfusable_mode():
+    m = _rand((2, 32), 91)
+    with pytest.raises(ValueError, match="clt_k"):
+        JNP.fused_reduce(m, m, 0.5, 16, 1, "local_topk", None)
+    with pytest.raises(ValueError, match="clt_k"):
+        PAL.fused_reduce(m, m, 0.5, 16, 1, "local_topk", None)
+
+
+# ---------------------------------------------------------------------------
 # property sweep (odd sizes x chunks x seeds through the hypothesis shim)
 # ---------------------------------------------------------------------------
 
@@ -335,6 +454,98 @@ def test_reduce_trajectory_identity_across_backends(layout, compressor, topm):
     r1 = CODECS["fp32"].decode(st1.residues["['w']"], shape)
     r2 = CODECS["fp32"].decode(st2.residues["['w']"], shape)
     np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-5, atol=1e-6)
+
+
+# fused=True vs fused=False must be BITWISE identical through the full reduce
+# (the fused kernel composes the exact same fp ops tile-locally). The matrix
+# covers every compressor kind (fusable shared-index, non-fusable local_topk),
+# topm {1, 2, 4}, both layouts, and the bucketed launch path.
+_FUSED_TRAJ_CASES = [
+    ("flat", "clt_k", 1, False),
+    ("flat", "true_topk", 2, False),
+    ("flat", "clt_k", 4, True),
+    ("flat", "local_topk", 2, True),  # non-fusable: silent 3-launch fallback
+    ("rowwise", "clt_k", 2, False),
+    ("rowwise", "true_topk", 4, True),
+    ("rowwise", "local_topk", 1, False),
+]
+
+
+def _fused_trajectory(layout, compressor, topm, backend, fused, bucketed,
+                      steps=20):
+    G = 4
+    params = {"w": jnp.zeros((8, 65)), "v": jnp.zeros((3, 40))}
+    cfg = ScaleComConfig(
+        compressor=CompressorConfig(compressor, chunk=16, topm=topm),
+        beta=0.25,
+        min_size=1,
+        layout=layout,
+        backend=backend,
+        fused=fused,
+        bucket_bytes=2048,  # splits w and v into separate buckets
+    )
+    state = init_state(params, G, min_size=1, layout=layout)
+    reduce_fn = jax.jit(
+        lambda g, s: scalecom_reduce(g, s, cfg, buckets=bucketed)[:2]
+    )
+    ghats = []
+    for t in range(steps):
+        g = {
+            k: _rand((G,) + v.shape, 3000 + 10 * t + i)
+            for i, (k, v) in enumerate(sorted(params.items()))
+        }
+        ghat, state = reduce_fn(g, state)
+        ghats.append(ghat)
+    return ghats, state
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("layout,compressor,topm,bucketed", _FUSED_TRAJ_CASES)
+def test_fused_trajectory_bitwise_identity(layout, compressor, topm, bucketed,
+                                           backend):
+    """20 steps of Algorithm 1 with fused=True ≡ fused=False, bitwise —
+    outputs every step AND the final EF residues."""
+    gh1, st1 = _fused_trajectory(layout, compressor, topm, backend, False, bucketed)
+    gh2, st2 = _fused_trajectory(layout, compressor, topm, backend, True, bucketed)
+    for a, b in zip(gh1, gh2):
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert st1.residues.keys() == st2.residues.keys()
+    for path in st1.residues:
+        for leaf in st1.residues[path]:
+            np.testing.assert_array_equal(
+                np.asarray(st1.residues[path][leaf]),
+                np.asarray(st2.residues[path][leaf]),
+                err_msg=f"residue[{path}][{leaf}]",
+            )
+
+
+@pytest.mark.slow
+def test_fused_trajectory_across_backends():
+    """fused=True trajectories agree between jnp and pallas to fp32 tolerance
+    (the cross-backend leg of the fused matrix)."""
+    gh1, _ = _fused_trajectory("rowwise", "clt_k", 2, "jnp", True, False)
+    gh2, _ = _fused_trajectory("rowwise", "clt_k", 2, "pallas", True, False)
+    for a, b in zip(gh1, gh2):
+        for k in a:
+            np.testing.assert_allclose(
+                np.asarray(a[k]), np.asarray(b[k]), rtol=1e-5, atol=1e-6
+            )
+
+
+def test_fused_env_var_drives_the_reduce(monkeypatch):
+    """SCALECOM_FUSED=1 + fused="auto" takes the fused path end-to-end (and
+    produces the same output as fused off)."""
+    monkeypatch.setenv("SCALECOM_FUSED", "1")
+    gh1, _ = _fused_trajectory("flat", "clt_k", 1, "pallas", "auto", False,
+                               steps=3)
+    monkeypatch.delenv("SCALECOM_FUSED")
+    gh2, _ = _fused_trajectory("flat", "clt_k", 1, "pallas", "auto", False,
+                               steps=3)
+    for a, b in zip(gh1, gh2):
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
 
 
 @pytest.mark.parametrize("layout", ["flat", "rowwise"])
@@ -437,6 +648,63 @@ def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
 def test_autotune_rejects_unknown_op():
     with pytest.raises(ValueError, match="op must be one of"):
         autotune.autotune("softmax", size=64, chunk=16)
+
+
+def test_autotune_fused_tile_falls_back_to_ef_update(tmp_path, monkeypatch):
+    """fused_reduce with no cache entry borrows ef_update's tuned tile (the
+    _TILE_FALLBACK chain); its own entry wins once a fused sweep ran; and an
+    unknown op name raises instead of silently pinning the default tile."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("SCALECOM_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    try:
+        from repro.kernels.chunk_topk import BLOCK_CHUNKS
+
+        # empty cache: kernel default
+        assert (
+            autotune.best_block_chunks("fused_reduce", 64, 16, jnp.float32)
+            == BLOCK_CHUNKS
+        )
+        # an ef_update entry at the same geometry is borrowed
+        ef_key = autotune._key("ef_update", 16, jnp.float32, 64)
+        cache.write_text(json.dumps({ef_key: 128}))
+        autotune.clear_cache()
+        assert autotune.best_block_chunks("fused_reduce", 64, 16, jnp.float32) == 128
+        # ...until the fused op has its own tuned entry
+        own_key = autotune._key("fused_reduce", 16, jnp.float32, 64)
+        cache.write_text(json.dumps({ef_key: 128, own_key: 512}))
+        autotune.clear_cache()
+        assert autotune.best_block_chunks("fused_reduce", 64, 16, jnp.float32) == 512
+        # the fallback never launders a stale (non-candidate) geometry
+        cache.write_text(json.dumps({ef_key: 7}))
+        autotune.clear_cache()
+        assert (
+            autotune.best_block_chunks("fused_reduce", 64, 16, jnp.float32)
+            == BLOCK_CHUNKS
+        )
+        with pytest.raises(ValueError, match="unknown autotune op"):
+            autotune.best_block_chunks("softmax", 64, 16, jnp.float32)
+    finally:
+        autotune.clear_cache()
+
+
+def test_autotune_sweeps_fused_reduce(tmp_path, monkeypatch):
+    """The explicit write path handles the fused op: one sweep populates a
+    fused_reduce entry the read path then returns (keyed by TOTAL launch
+    rows, workers included — PallasBackend._block's convention)."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("SCALECOM_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    try:
+        best = autotune.autotune(
+            "fused_reduce", size=256, chunk=16, candidates=(64,), iters=1
+        )
+        assert best == 64
+        # size=256, chunk=16 -> 16 chunk rows x 4 sweep workers = 64 rows
+        assert autotune.best_block_chunks("fused_reduce", 64, 16, jnp.float32) == 64
+        assert any("fused_reduce" in k for k in json.loads(cache.read_text()))
+    finally:
+        autotune.clear_cache()
 
 
 @pytest.mark.parametrize(

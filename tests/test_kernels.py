@@ -81,3 +81,58 @@ def test_kernel_grid_covers_multiple_blocks():
     i2, v2 = ref.chunk_argmax_ref(x, chunk)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# launch-count tripwire: the fused reduce is ONE pallas_call, the composed
+# chain is three — counted on the jaxpr (repro.backends.introspect), which a
+# cached jit executable cannot fool
+# ---------------------------------------------------------------------------
+
+
+def test_fused_reduce_is_one_launch():
+    from repro.backends import resolve_backend
+    from repro.backends.base import KernelBackend
+    from repro.backends.introspect import count_pallas_launches
+
+    pal = resolve_backend("pallas")
+    chunk, G = 16, 4
+    m = jax.random.normal(jax.random.PRNGKey(0), (G, 200))
+    g = jax.random.normal(jax.random.PRNGKey(1), (G, 200))
+    leader = jnp.zeros((), jnp.int32)
+
+    def fused(mm, gg, ll):
+        return pal.fused_reduce(mm, gg, 0.25, chunk, 1, "clt_k", ll)
+
+    def composed(mm, gg, ll):
+        return KernelBackend.fused_reduce(pal, mm, gg, 0.25, chunk, 1, "clt_k", ll)
+
+    assert count_pallas_launches(fused, m, g, leader) == 1
+    assert count_pallas_launches(composed, m, g, leader) == 3
+
+
+def test_whole_reduce_launch_count_with_fusion():
+    """Through scalecom_reduce: fused=True pays 1 inner-loop launch per
+    compressed tensor, fused=False pays 3 — the end-to-end tripwire for a
+    regression that silently re-splits the fused path."""
+    from repro.backends.introspect import count_pallas_launches
+    from repro.core.compressors import CompressorConfig
+    from repro.core.scalecom import ScaleComConfig, scalecom_reduce
+    from repro.core.state import init_state
+
+    G = 4
+    params = {"w": jnp.zeros((8, 64))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(2), (G, 8, 64))}
+
+    def launches(fused):
+        cfg = ScaleComConfig(
+            compressor=CompressorConfig("clt_k", chunk=16),
+            min_size=1, layout="rowwise", backend="pallas", fused=fused,
+        )
+        state = init_state(params, G, min_size=1, layout="rowwise")
+        return count_pallas_launches(
+            lambda gg, ss: scalecom_reduce(gg, ss, cfg)[0], g, state
+        )
+
+    assert launches(True) == 1
+    assert launches(False) == 3

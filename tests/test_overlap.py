@@ -332,3 +332,33 @@ def test_timeline_degrades_for_uncompressed_scheme():
 def test_timeline_rejects_nonpositive_bucket_bytes():
     with pytest.raises(ValueError, match="bucket_bytes"):
         overlap_timeline(reference_transformer_perf(), "scalecom", 0)
+
+
+# ---------------------------------------------------------------------------
+# the fused-vs-unfused HBM pass model (analysis.perfmodel.reduce_hbm_passes)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_hbm_passes_strictly_fewer():
+    """The fused single-launch reduce must model strictly fewer HBM passes
+    than the 3-launch chain for every worker count — the PR's acceptance
+    criterion — and both break down into per-phase passes that sum to the
+    total."""
+    from repro.analysis.perfmodel import fused_hbm_report, reduce_hbm_passes
+
+    for workers in (1, 2, 8, 64):
+        fused = reduce_hbm_passes(True, workers=workers)
+        unfused = reduce_hbm_passes(False, workers=workers)
+        assert fused["passes_total"] < unfused["passes_total"]
+        for model in (fused, unfused):
+            assert model["passes_total"] == sum(model["phases"].values())
+        # the saved passes are exactly the inter-launch re-streaming: the ef
+        # materialization (3) and the select's re-read (1)
+        assert unfused["passes_total"] - fused["passes_total"] == 4.0
+
+    rep = fused_hbm_report(1 << 20, workers=8)
+    assert rep["fused"]["bytes"] < rep["unfused"]["bytes"]
+    assert rep["traffic_ratio"] > 2.0  # ~7.1/3.1 at 8 workers
+    assert rep["launches"] == {"unfused": 3, "fused": 1}
+    base = 8 * (1 << 20) * 4
+    assert rep["fused"]["phases"]["fused_kernel"] == 3.0 * base

@@ -66,8 +66,19 @@ def test_compat_boundary_fixture():
     assert "jax.make_mesh" in msgs  # the version-gated attribute
 
 
+def test_compat_boundary_catches_pallas_leak():
+    """A ``pl.pallas_call`` kernel escaping outside kernels/ must fire — the
+    fused-reduce op keeps every launch site in kernels/, and this is the rule
+    that keeps it that way."""
+    findings = _run(FIXTURES / "pallas_leak.py", "compat-boundary")
+    assert findings and all(f.rule == "compat-boundary" for f in findings)
+    msgs = "\n".join(f.message for f in findings)
+    assert "jax.experimental" in msgs
+
+
 def test_compat_boundary_allows_compat_and_kernels_dirs():
     # the real compat layer and the pallas kernels use these symbols heavily
+    # (incl. the fused single-launch reduce in kernels/fused_reduce.py)
     assert not _run(SRC / "compat", "compat-boundary")
     assert not _run(SRC / "kernels", "compat-boundary")
 
